@@ -1,0 +1,51 @@
+"""Distributed mining on a simulated multi-node cluster (8 host devices),
+reproducing the paper's single-node vs multi-node comparison (Fig 5) plus the
+SON two-round variant.
+
+python examples/distributed_mining.py          # re-execs with 8 fake devices
+"""
+
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import time
+
+import jax
+
+from repro.core.apriori import AprioriConfig, mine
+from repro.core.son import mine_son
+from repro.data.synthetic import QuestConfig, gen_transactions
+
+
+def main():
+    db = gen_transactions(QuestConfig(num_transactions=20_000, num_items=512, avg_len=10, seed=7))
+    print(f"DB: {db.shape} ({db.nbytes/1e6:.0f} MB dense)")
+
+    # single node (the paper's 'standalone')
+    cfg1 = AprioriConfig(min_support=0.02, max_k=5, count_impl="jnp")
+    t0 = time.time(); r1 = mine(db, cfg1); t1 = time.time() - t0
+    print(f"standalone: {t1:.2f}s, {r1.total_frequent} itemsets")
+
+    # 4x2 'cluster' (4-way transaction sharding x 2-way candidate sharding)
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = AprioriConfig(min_support=0.02, max_k=5, count_impl="jnp",
+                        data_axes=("data",), model_axis="model")
+    t0 = time.time(); r2 = mine(db, cfg, mesh=mesh); t2 = time.time() - t0
+    print(f"distributed (4x2): {t2:.2f}s, {r2.total_frequent} itemsets "
+          f"(speedup {t1/t2:.2f}x)")
+    assert r1.as_dict() == r2.as_dict(), "distribution must not change results"
+
+    # SON: 2 distributed rounds instead of max_k
+    t0 = time.time(); r3 = mine_son(db, cfg, mesh=mesh, num_partitions=8); t3 = time.time() - t0
+    print(f"SON 2-phase: {t3:.2f}s, {r3.total_frequent} itemsets")
+    assert r3.as_dict() == r1.as_dict()
+    print("all modes agree — the paper's design claim, verified")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Quickstart: mine frequent itemsets + association rules on synthetic data.
+
+PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.apriori import AprioriConfig, mine
+from repro.core.rules import extract_rules
+from repro.data.synthetic import QuestConfig, gen_transactions
+
+
+def main():
+    # 1. generate a T10-style transaction database (the paper's workload)
+    db = gen_transactions(QuestConfig(num_transactions=5_000, num_items=200, avg_len=9, seed=42))
+    print(f"DB: {db.shape[0]} transactions x {db.shape[1]} items, density {db.mean():.3f}")
+
+    # 2. level-wise distributed Apriori (single device here; add a mesh for a pod)
+    result = mine(db, AprioriConfig(min_support=0.03, max_k=5))
+    for k in sorted(result.levels):
+        print(f"  L{k}: {result.levels[k][0].shape[0]} frequent itemsets")
+
+    # 3. association rules (KDD interpretation step)
+    rules = extract_rules(result, min_confidence=0.7, max_rules=10)
+    print("top rules:")
+    for r in rules:
+        print(f"  {r.antecedent} -> {r.consequent}   conf={r.confidence:.2f} lift={r.lift:.2f}")
+
+
+if __name__ == "__main__":
+    main()

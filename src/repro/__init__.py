@@ -1,0 +1,15 @@
+"""repro — Map/Reduce Apriori (ACIJ 2012) as a production JAX/TPU framework.
+
+Layers:
+  core/         the paper's contribution: distributed level-wise Apriori
+  data/         transaction + token pipelines
+  kernels/      Pallas TPU kernels (support counting, flash attention)
+  models/       assigned-architecture LM zoo (pure JAX)
+  configs/      one config per assigned architecture
+  distributed/  sharding rules, checkpointing, fault tolerance, compression
+  training/     optimizer + train step
+  serving/      KV/state caches + decode step
+  launch/       mesh, dry-run, drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,26 @@
+"""Architecture registry: one module per assigned architecture."""
+
+from importlib import import_module
+
+from repro.configs.shapes import SHAPES, shape_names_for, is_skipped
+
+ARCH_IDS = [
+    "zamba2_2p7b",
+    "minicpm3_4b",
+    "qwen1p5_110b",
+    "deepseek_coder_33b",
+    "qwen1p5_4b",
+    "musicgen_medium",
+    "dbrx_132b",
+    "granite_moe_3b_a800m",
+    "internvl2_2b",
+    "rwkv6_1p6b",
+    "apriori",          # the paper's own workload config
+]
+
+
+def get_config(arch_id: str):
+    arch_id = arch_id.replace("-", "_").replace(".", "p")
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return import_module(f"repro.configs.{arch_id}").CONFIG

@@ -1,0 +1,14 @@
+"""The paper's own workload: mining configuration (not an LM arch)."""
+
+from repro.core.apriori import AprioriConfig
+from repro.data.synthetic import QuestConfig
+
+CONFIG = dict(
+    mining=AprioriConfig(
+        min_support=0.01,
+        max_k=8,
+        data_axes=("data",),
+        model_axis="model",
+    ),
+    dataset=QuestConfig(num_transactions=1 << 20, num_items=2048, avg_len=12, num_patterns=256),
+)

@@ -1,0 +1,14 @@
+"""DBRX-132B [hf:databricks/dbrx-base] — MoE 16 experts top-4, GQA kv=8."""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    moe=MoEConfig(num_experts=16, top_k=4, d_ff_expert=10752),
+)

@@ -1,0 +1,15 @@
+"""Granite-MoE-3B-A800M [hf:ibm-granite] — fine-grained MoE 40e top-8.
+40 experts pad to 48 for 16-way expert sharding (DESIGN.md §4)."""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    moe=MoEConfig(num_experts=40, top_k=8, d_ff_expert=512, padded_experts=48),
+)

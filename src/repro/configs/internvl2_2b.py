@@ -1,0 +1,16 @@
+"""InternVL2-2B [arXiv:2404.16821; hf] — InternViT (STUB frontend: precomputed
+patch embeddings) + InternLM2-1.8B backbone (GQA kv=8)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    frontend="vlm",
+    num_patches=256,
+)

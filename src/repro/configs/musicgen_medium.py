@@ -1,0 +1,18 @@
+"""MusicGen-medium [arXiv:2306.05284; hf] — decoder-only over EnCodec tokens.
+Modality frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings (B, S, d_model); the backbone is the deliverable."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    frontend="frames",
+    norm="layernorm",
+    act="gelu",
+)

@@ -1,0 +1,14 @@
+"""Qwen1.5-110B [hf:Qwen family] — dense GQA (kv=8) with QKV bias."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=49152,
+    vocab_size=152064,
+    qkv_bias=True,
+)

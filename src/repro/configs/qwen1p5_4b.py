@@ -1,0 +1,14 @@
+"""Qwen1.5-4B [hf:Qwen family] — dense MHA (kv=20) with QKV bias."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    num_layers=40,
+    d_model=2560,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=6912,
+    vocab_size=151936,
+    qkv_bias=True,
+)

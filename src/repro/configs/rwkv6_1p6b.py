@@ -1,0 +1,15 @@
+"""RWKV6-1.6B "Finch" [arXiv:2404.05892] — attention-free, data-dependent decay."""
+
+from repro.models.config import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=7168,
+    vocab_size=65536,
+    block_type="rwkv6",
+    rwkv=RWKVConfig(head_dim=64, lora_dim=32, d_ff=7168, chunk=128),
+)

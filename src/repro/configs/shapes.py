@@ -1,0 +1,28 @@
+"""Assigned input-shape sets (identical across the LM pool).
+
+``decode_*`` / ``long_*`` lower serve decode (one new token against a
+seq_len-sized cache); ``prefill_*`` lowers the prompt pass; ``train_*``
+lowers the full fwd+bwd+optimizer step.  ``long_500k`` applies only to
+sub-quadratic families (SSM / hybrid / linear-attn) — skips recorded in
+DESIGN.md §4.
+"""
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4_096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32_768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32_768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524_288, global_batch=1),
+}
+
+_SUBQUADRATIC = ("mamba2", "rwkv6", "zamba_hybrid")
+
+
+def shape_names_for(cfg) -> list[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.block_type in _SUBQUADRATIC:
+        names.append("long_500k")
+    return names
+
+
+def is_skipped(cfg, shape_name: str) -> bool:
+    return shape_name == "long_500k" and cfg.block_type not in _SUBQUADRATIC

@@ -1,0 +1,17 @@
+"""Zamba2-2.7B [arXiv:2411.15242; hf] — Mamba2 backbone + ONE weight-shared
+attention+FFN block applied every 6 layers (hybrid)."""
+
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    block_type="zamba_hybrid",
+    share_every=6,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, n_groups=1, conv_width=4, chunk=256),
+)

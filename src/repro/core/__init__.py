@@ -1,0 +1,14 @@
+# The paper's primary contribution: distributed level-wise Apriori mining
+# expressed as Map/Combine/Reduce over jax.shard_map + lax collectives.
+from repro.core.itemsets import (
+    dense_from_lists,
+    itemsets_to_dense,
+    pack_bits,
+    unpack_bits,
+    singleton_itemsets,
+)
+from repro.core.candidates import generate_candidates, rows_isin
+from repro.core.mapreduce import MapReduceJob, mapreduce, hierarchical_psum
+from repro.core.apriori import AprioriConfig, AprioriResult, mine, make_count_step
+from repro.core.son import mine_son
+from repro.core.rules import extract_rules, Rule

@@ -1,0 +1,198 @@
+"""Distributed level-wise Apriori — the paper's algorithm (§3.3) on a TPU mesh.
+
+Per level k:
+  driver (host):  candidate generation from F_{k-1}   (core.candidates)
+  Map (device):   local support counting per transaction shard
+                  (kernels.support_count — the MXU containment matmul)
+  Reduce:         lax.psum of the count vector over the data axes
+  driver (host):  prune by min support -> F_k
+
+The candidate axis is additionally sharded over the 'model' mesh axis, a 2-D
+decomposition of the paper's 1-D map phase (DESIGN.md §5). Padding rules:
+transactions pad with zero rows (inert), candidates pad with |c| = -1 rows
+(never match). Counting is exact (int32).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import candidates as cand_mod
+from repro.core import itemsets as enc
+from repro.core.mapreduce import MapReduceJob, mapreduce, pad_rows_to_shards
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class AprioriConfig:
+    min_support: float = 0.01          # fraction of |DB|; min_count = ceil(frac * N)
+    max_k: int = 8                     # maximum itemset size to mine
+    count_impl: str = "auto"           # auto | jnp | pallas | pallas_interpret
+    data_axes: tuple = ("data",)       # mesh axes sharding the transaction rows
+    model_axis: str | None = None      # mesh axis sharding the candidate rows
+    candidate_pad: int = 256           # K padded to a multiple (jit bucket + divisibility)
+    max_candidates_per_pass: int = 1 << 16  # split huge candidate sets across passes
+    use_naive_paper_map: bool = False  # paper's 'all subsets' enumeration (small I only)
+    operand_dtype: str = "bf16"        # kernel operand mode (bf16 MXU / int8)
+
+
+@dataclasses.dataclass
+class AprioriResult:
+    """k -> (itemsets (F_k, k) int32, supports (F_k,) int64)."""
+
+    levels: dict
+    num_transactions: int
+    min_count: int
+
+    def frequent(self, k: int) -> np.ndarray:
+        return self.levels[k][0] if k in self.levels else np.zeros((0, k), np.int32)
+
+    def support(self, itemset) -> int:
+        k = len(itemset)
+        if k not in self.levels:
+            return 0
+        sets, sup = self.levels[k]
+        hit = np.all(sets == np.asarray(sorted(itemset), np.int32)[None, :], axis=1)
+        idx = np.flatnonzero(hit)
+        return int(sup[idx[0]]) if idx.size else 0
+
+    def as_dict(self) -> dict:
+        out = {}
+        for k, (sets, sup) in self.levels.items():
+            for row, s in zip(sets, sup):
+                out[tuple(int(x) for x in row)] = int(s)
+        return out
+
+    @property
+    def total_frequent(self) -> int:
+        return sum(v[0].shape[0] for v in self.levels.values())
+
+
+def _pad_bucket(k: int, quantum: int) -> int:
+    """Pad K to a power-of-two-ish bucket (bounds jit recompiles to O(log K))."""
+    k = max(k, 1)
+    bucket = quantum
+    while bucket < k:
+        bucket *= 2
+    return bucket
+
+
+def make_count_step(
+    mesh: jax.sharding.Mesh | None,
+    cfg: AprioriConfig,
+) -> Callable:
+    """Build the jit'd Map/Reduce support-count step.
+
+    fn(T (N,I) int8 sharded over data_axes, C (Kp,I) int8, lengths (Kp,) int32)
+    -> counts (Kp,) int32, replicated over data axes, sharded over model_axis.
+    """
+
+    def local_count(t, c, ln):
+        return kops.support_count(
+            t, c, ln, impl=cfg.count_impl, operand_dtype=cfg.operand_dtype
+        )
+
+    if mesh is None or math.prod(mesh.shape.values()) == 1:
+        return jax.jit(local_count)
+
+    job = MapReduceJob(map_fn=local_count, reduce_axes=tuple(cfg.data_axes))
+    in_specs = (
+        P(cfg.data_axes, None),          # transactions: HDFS-block row partition
+        P(cfg.model_axis, None),         # candidates: 2-D decomposition over 'model'
+        P(cfg.model_axis),
+    )
+    return mapreduce(job, mesh, in_specs=in_specs, out_specs=P(cfg.model_axis))
+
+
+def _count_level(count_step, t_dev, cand_sets: np.ndarray, num_items: int, cfg: AprioriConfig, mesh):
+    """Count supports for one level's candidates, in passes, padded/bucketed."""
+    k_total = cand_sets.shape[0]
+    model_shards = mesh.shape[cfg.model_axis] if (mesh is not None and cfg.model_axis) else 1
+    quantum = max(cfg.candidate_pad, model_shards)
+    counts = np.zeros(k_total, dtype=np.int64)
+    for start in range(0, k_total, cfg.max_candidates_per_pass):
+        chunk = cand_sets[start : start + cfg.max_candidates_per_pass]
+        kp = _pad_bucket(chunk.shape[0], quantum)
+        c_dense = np.zeros((kp, num_items), dtype=np.int8)
+        c_dense[: chunk.shape[0]] = enc.itemsets_to_dense(chunk, num_items)
+        lengths = np.full(kp, -1, dtype=np.int32)
+        lengths[: chunk.shape[0]] = chunk.shape[1]
+        if mesh is not None:
+            c_dev = jax.device_put(c_dense, NamedSharding(mesh, P(cfg.model_axis, None)))
+            len_dev = jax.device_put(lengths, NamedSharding(mesh, P(cfg.model_axis)))
+        else:
+            c_dev, len_dev = c_dense, lengths
+        out = np.asarray(count_step(t_dev, c_dev, len_dev))
+        counts[start : start + chunk.shape[0]] = out[: chunk.shape[0]]
+    return counts
+
+
+def mine(
+    transactions_dense,
+    cfg: AprioriConfig = AprioriConfig(),
+    mesh: jax.sharding.Mesh | None = None,
+    checkpoint_cb: Callable | None = None,
+    resume_state: dict | None = None,
+) -> AprioriResult:
+    """Level-wise distributed Apriori over a dense {0,1} transaction matrix.
+
+    checkpoint_cb(level_k, levels_dict): called after each completed level —
+    the mining checkpoint hook (restartable via ``resume_state`` =
+    {'levels': ..., 'next_k': ...}, see distributed.fault_tolerance).
+    """
+    t_np = np.asarray(transactions_dense, dtype=np.int8)
+    n, num_items = t_np.shape
+    min_count = max(1, math.ceil(cfg.min_support * n))
+
+    # --- place the DB once: row-sharded over the data axes (HDFS layout) ---
+    if mesh is not None:
+        data_shards = math.prod(mesh.shape[a] for a in cfg.data_axes)
+        t_pad, _ = pad_rows_to_shards(t_np, data_shards)
+        t_dev = jax.device_put(t_pad, NamedSharding(mesh, P(cfg.data_axes, None)))
+    else:
+        t_dev = jnp.asarray(t_np)
+    count_step = make_count_step(mesh, cfg)
+
+    levels = dict(resume_state["levels"]) if resume_state else {}
+    start_k = resume_state["next_k"] if resume_state else 1
+
+    if start_k <= 1:
+        # level 1: supports of singletons — the same count path (uniform Map/Reduce)
+        singles = enc.singleton_itemsets(num_items)
+        sup1 = _count_level(count_step, t_dev, singles, num_items, cfg, mesh)
+        keep = sup1 >= min_count
+        levels[1] = (singles[keep], sup1[keep])
+        if checkpoint_cb:
+            checkpoint_cb(1, levels)
+        start_k = 2
+
+    for k in range(start_k, cfg.max_k + 1):
+        prev_sets = levels.get(k - 1, (np.zeros((0, k - 1), np.int32),))[0]
+        if prev_sets.shape[0] < k:   # cannot form a k-itemset
+            break
+        if cfg.use_naive_paper_map:
+            # paper §3.3: enumerate every k-subset of the (frequent) item universe
+            freq_items = levels[1][0].ravel()
+            combos = cand_mod.all_k_subsets_of_universe(freq_items.size, k)
+            cands = freq_items[combos]
+        else:
+            cands = cand_mod.generate_candidates(prev_sets)
+        if cands.shape[0] == 0:
+            break
+        sup = _count_level(count_step, t_dev, cands, num_items, cfg, mesh)
+        keep = sup >= min_count
+        if not keep.any():
+            break
+        levels[k] = (cands[keep], sup[keep])
+        if checkpoint_cb:
+            checkpoint_cb(k, levels)
+
+    return AprioriResult(levels=levels, num_transactions=n, min_count=min_count)

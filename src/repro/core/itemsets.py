@@ -1,0 +1,65 @@
+"""Itemset / transaction encodings.
+
+The canonical device format is a dense {0,1} int8 matrix over the item
+vocabulary: transactions (N, I) and candidate itemsets (K, I).  Containment
+``c ⊆ t`` then becomes ``<t, c> == |c|``, turning support counting into an
+int8 matmul with an exact int32 accumulation — the MXU-native reshape of the
+paper's per-transaction subset scan (DESIGN.md §2).
+
+A packed uint32 bitset format (N, ceil(I/32)) is provided for host-side
+storage and for the VPU popcount counting path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def dense_from_lists(transactions, num_items: int) -> np.ndarray:
+    """Lists of item ids -> dense {0,1} int8 matrix (N, num_items)."""
+    out = np.zeros((len(transactions), num_items), dtype=np.int8)
+    for row, items in enumerate(transactions):
+        if len(items):
+            idx = np.asarray(list(items), dtype=np.int64)
+            if (idx < 0).any() or (idx >= num_items).any():
+                raise ValueError(f"item id out of range in transaction {row}")
+            out[row, idx] = 1
+    return out
+
+
+def itemsets_to_dense(itemsets: np.ndarray, num_items: int) -> np.ndarray:
+    """(K, k) arrays of item ids -> dense {0,1} int8 matrix (K, num_items)."""
+    itemsets = np.asarray(itemsets)
+    if itemsets.ndim != 2:
+        raise ValueError("itemsets must be (K, k)")
+    k_count = itemsets.shape[0]
+    out = np.zeros((k_count, num_items), dtype=np.int8)
+    rows = np.repeat(np.arange(k_count), itemsets.shape[1])
+    out[rows, itemsets.ravel()] = 1
+    return out
+
+
+def pack_bits(dense: np.ndarray) -> np.ndarray:
+    """Dense {0,1} (N, I) -> packed uint32 (N, ceil(I/32)), little-endian bits."""
+    dense = np.asarray(dense, dtype=np.uint8)
+    n, i = dense.shape
+    words = (i + 31) // 32
+    padded = np.zeros((n, words * 32), dtype=np.uint8)
+    padded[:, :i] = dense
+    bits = padded.reshape(n, words, 32)
+    shifts = np.arange(32, dtype=np.uint32)
+    return (bits.astype(np.uint32) << shifts).sum(axis=2, dtype=np.uint32)
+
+
+def unpack_bits(packed: np.ndarray, num_items: int) -> np.ndarray:
+    """Inverse of :func:`pack_bits`."""
+    packed = np.asarray(packed, dtype=np.uint32)
+    n, words = packed.shape
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = (packed[:, :, None] >> shifts) & np.uint32(1)
+    return bits.reshape(n, words * 32)[:, :num_items].astype(np.int8)
+
+
+def singleton_itemsets(num_items: int) -> np.ndarray:
+    """All 1-itemsets, (num_items, 1)."""
+    return np.arange(num_items, dtype=np.int32)[:, None]

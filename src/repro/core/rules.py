@@ -1,0 +1,39 @@
+"""Association-rule extraction from mined frequent itemsets (KDD step 5)."""
+
+from __future__ import annotations
+
+import dataclasses
+from itertools import combinations
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    antecedent: tuple
+    consequent: tuple
+    support: float      # s(A ∪ C) / N
+    confidence: float   # s(A ∪ C) / s(A)
+    lift: float         # confidence / (s(C) / N)
+
+
+def extract_rules(result, min_confidence: float = 0.5, max_rules: int | None = None):
+    """All rules A -> C with A ∪ C frequent and confidence >= threshold."""
+    supports = result.as_dict()
+    n = result.num_transactions
+    rules = []
+    for itemset, sup in supports.items():
+        if len(itemset) < 2:
+            continue
+        for r in range(1, len(itemset)):
+            for ante in combinations(itemset, r):
+                s_a = supports.get(tuple(sorted(ante)))
+                if not s_a:
+                    continue
+                conf = sup / s_a
+                if conf < min_confidence:
+                    continue
+                cons = tuple(sorted(set(itemset) - set(ante)))
+                s_c = supports.get(cons)
+                lift = (conf / (s_c / n)) if s_c else float("nan")
+                rules.append(Rule(tuple(sorted(ante)), cons, sup / n, conf, lift))
+    rules.sort(key=lambda r: (-r.confidence, -r.support))
+    return rules[:max_rules] if max_rules else rules

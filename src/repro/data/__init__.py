@@ -1,0 +1,3 @@
+from repro.data.synthetic import gen_transactions, QuestConfig
+from repro.data.corpus import transactions_from_tokens
+from repro.data.pipeline import ShardedBatchIterator, synthetic_token_batches

@@ -1,0 +1,78 @@
+"""Sharded host→device data pipeline.
+
+Deterministic epoch shuffling (seed fold-in), global-batch sharding over the
+mesh data axes, and a one-step prefetch thread (double buffering) so host
+batch assembly overlaps device compute — the data-pipeline substrate for both
+the miner and the LM trainer.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def synthetic_token_batches(vocab_size: int, batch: int, seq_len: int, seed: int = 0):
+    """Infinite deterministic stream of {tokens, labels} int32 batches."""
+    step = 0
+    while True:
+        rng = np.random.default_rng((seed, step))
+        toks = rng.integers(0, vocab_size, size=(batch, seq_len + 1), dtype=np.int32)
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        step += 1
+
+
+class ShardedBatchIterator:
+    """Wraps a host batch generator; device_puts each pytree leaf with the
+    given sharding and prefetches `prefetch` batches on a worker thread."""
+
+    def __init__(self, gen, mesh, spec_fn, prefetch: int = 2):
+        self._gen = gen
+        self._mesh = mesh
+        self._spec_fn = spec_fn  # leaf_path-free: array -> PartitionSpec
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self._mesh is None:
+            return jax.tree.map(jax.numpy.asarray, batch)
+        return jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(self._mesh, self._spec_fn(x))), batch
+        )
+
+    def _worker(self):
+        try:
+            for batch in self._gen:
+                if self._stop.is_set():
+                    return
+                self._q.put(self._place(batch))
+        finally:
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+
+
+def batch_spec(data_axes=("data",)):
+    """PartitionSpec factory: shard axis 0 (global batch) over the data axes."""
+
+    def fn(x):
+        return P(data_axes, *([None] * (np.ndim(x) - 1)))
+
+    return fn

@@ -1,0 +1,65 @@
+"""IBM Quest-style synthetic transaction generator (the T10I4D family used by
+the Apriori literature, incl. the datasets the paper's testbed mimics).
+
+Transactions are built from a pool of 'potentially frequent' patterns: each
+transaction draws a few patterns (sizes ~ Poisson(pattern_len)), keeps each
+pattern item with prob (1 - corruption), and tops up with zipf-weighted noise
+items until ~Poisson(avg_len) items. Deterministic under seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuestConfig:
+    num_transactions: int = 10_000
+    num_items: int = 512
+    avg_len: float = 10.0          # T in T10I4D
+    num_patterns: int = 64
+    avg_pattern_len: float = 4.0   # I in T10I4D
+    corruption: float = 0.35
+    patterns_per_txn: float = 1.5
+    zipf_a: float = 1.3            # item popularity skew for noise items
+    seed: int = 0
+
+
+def gen_transactions(cfg: QuestConfig = QuestConfig()) -> np.ndarray:
+    """Returns dense {0,1} int8 (num_transactions, num_items)."""
+    rng = np.random.default_rng(cfg.seed)
+    n, i = cfg.num_transactions, cfg.num_items
+
+    # item popularity (zipf-ish, normalized)
+    weights = 1.0 / np.power(np.arange(1, i + 1, dtype=np.float64), cfg.zipf_a)
+    weights /= weights.sum()
+
+    # pattern pool
+    patterns = []
+    for _ in range(cfg.num_patterns):
+        size = max(2, rng.poisson(cfg.avg_pattern_len))
+        size = min(size, i)
+        patterns.append(rng.choice(i, size=size, replace=False, p=weights))
+
+    out = np.zeros((n, i), dtype=np.int8)
+    n_pat = rng.poisson(cfg.patterns_per_txn, size=n)
+    txn_len = np.maximum(1, rng.poisson(cfg.avg_len, size=n))
+    pat_weights = 1.0 / np.arange(1, cfg.num_patterns + 1, dtype=np.float64)
+    pat_weights /= pat_weights.sum()
+    for t in range(n):
+        for _ in range(n_pat[t]):
+            pat = patterns[rng.choice(cfg.num_patterns, p=pat_weights)]
+            keep = rng.random(pat.size) > cfg.corruption
+            out[t, pat[keep]] = 1
+        deficit = txn_len[t] - int(out[t].sum())
+        if deficit > 0:
+            noise = rng.choice(i, size=min(deficit, i), replace=False, p=weights)
+            out[t, noise] = 1
+    return out
+
+
+def gen_transaction_lists(cfg: QuestConfig = QuestConfig()) -> list:
+    dense = gen_transactions(cfg)
+    return [np.flatnonzero(row).tolist() for row in dense]

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    param_pspecs,
+    batch_pspec,
+    cache_pspecs,
+    state_pspecs,
+)
+from repro.distributed.compression import compressed_psum, int8_ef_state
+from repro.distributed.checkpoint import save_checkpoint, load_checkpoint, CheckpointManager
+from repro.distributed.fault_tolerance import (
+    Supervisor,
+    SimulatedFailure,
+    WorkQueue,
+    run_with_backup_tasks,
+)

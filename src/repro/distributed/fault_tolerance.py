@@ -1,0 +1,152 @@
+"""Fault tolerance: supervisor (checkpoint/restart + elastic re-mesh) and
+straggler mitigation (over-partitioned work queue + speculative backups).
+
+The paper's Fig-4 finding — heterogeneous clusters pay the slowest node's
+price — is exactly the straggler problem; Hadoop answers with speculative
+execution, and `run_with_backup_tasks` is the TPU-side equivalent: work is
+over-partitioned `factor`x beyond the device count and unfinished shards are
+re-issued to idle devices, bounding makespan by ~max(shard) instead of
+~max(node) * load.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.distributed.checkpoint import CheckpointManager, latest_step, load_checkpoint
+
+
+class SimulatedFailure(Exception):
+    """Raised by a failure injector to emulate a node loss."""
+
+    def __init__(self, lost_nodes: int = 1):
+        super().__init__(f"lost {lost_nodes} node(s)")
+        self.lost_nodes = lost_nodes
+
+
+@dataclasses.dataclass
+class Supervisor:
+    """Train-loop wrapper: periodic async checkpoints, restart-on-failure,
+    elastic re-mesh through the checkpoint's elastic restore path.
+
+    make_mesh_fn(num_nodes) -> mesh; rebuild_fn(mesh, restored_state) -> the
+    jit'd step closure for that mesh (recompiled on re-mesh — elastic scale).
+    """
+
+    ckpt_dir: str
+    make_mesh_fn: Callable
+    rebuild_fn: Callable
+    checkpoint_every: int = 10
+    keep: int = 3
+
+    def run(
+        self,
+        state,
+        state_specs,
+        batch_fn: Callable,
+        num_steps: int,
+        num_nodes: int,
+        failure_injector: Callable | None = None,
+        max_restarts: int = 3,
+    ):
+        """``batch_fn(step) -> batch`` must be a step-indexed DETERMINISTIC
+        stream (data.pipeline seeds by step): on restore the data order
+        rewinds with the model state, which is what makes restart bit-exact —
+        a stateful iterator cannot be rewound and silently skips batches."""
+        mgr = CheckpointManager(self.ckpt_dir, keep=self.keep)
+        mesh = self.make_mesh_fn(num_nodes)
+        step_fn = self.rebuild_fn(mesh, state)
+        restarts = 0
+        step = int(jax.device_get(state["opt"]["step"])) if "opt" in state else 0
+        history = []
+        while step < num_steps:
+            try:
+                if failure_injector:
+                    failure_injector(step)
+                batch = batch_fn(step)
+                state, metrics = step_fn(state, batch)
+                step += 1
+                history.append({k: float(jax.device_get(v)) for k, v in metrics.items()})
+                if step % self.checkpoint_every == 0:
+                    mgr.save_async(state, step, specs=state_specs)
+            except SimulatedFailure as fail:
+                restarts += 1
+                if restarts > max_restarts:
+                    raise
+                mgr.wait()
+                num_nodes = max(1, num_nodes - fail.lost_nodes)  # elastic shrink
+                mesh = self.make_mesh_fn(num_nodes)
+                last = latest_step(self.ckpt_dir)
+                if last is not None:
+                    state, _ = load_checkpoint(
+                        self.ckpt_dir, state, step=last, mesh=mesh, specs=state_specs
+                    )
+                    step = last
+                step_fn = self.rebuild_fn(mesh, state)  # recompile for new mesh
+        mgr.wait()
+        return state, history, {"restarts": restarts, "final_nodes": num_nodes}
+
+
+# ------------------------------------------------------- straggler layer ----
+@dataclasses.dataclass
+class WorkQueue:
+    """Over-partitioned shard queue with speculative re-issue."""
+
+    shards: Sequence
+    factor: int = 4
+
+    def __post_init__(self):
+        self.pending = list(range(len(self.shards)))
+        self.done: dict = {}
+
+
+def run_with_backup_tasks(
+    shards,
+    worker_fn: Callable,
+    node_speeds: Sequence[float],
+    backup: bool = True,
+):
+    """Simulate the paper's FHDSC (heterogeneous) cluster executing a map
+    phase. Shards are assigned round-robin (Hadoop block placement is
+    speed-OBLIVIOUS — that is exactly why Fig 4's heterogeneous cluster
+    lags). Each shard costs `size(shard)/speed` on its node.
+
+    backup=True enables speculative re-execution: a node that drains its own
+    queue steals the largest unstarted shard from the most-backlogged node
+    (Hadoop's speculative task, TPU work-queue form — DESIGN.md §5).
+
+    Returns (results, makespan_seconds_simulated).
+    """
+    n_nodes = len(node_speeds)
+    costs = [float(np.asarray(s).size) for s in shards]
+    queues = [[] for _ in range(n_nodes)]
+    for i in range(len(shards)):
+        queues[i % n_nodes].append(i)  # speed-oblivious placement
+
+    times = [0.0] * n_nodes
+    done = [False] * len(shards)
+    while not all(done):
+        node = min(range(n_nodes), key=lambda n: times[n])
+        if queues[node]:
+            i = queues[node].pop(0)
+        elif backup:
+            donor = max(range(n_nodes), key=lambda n: sum(costs[j] for j in queues[n]))
+            if not queues[donor]:
+                break
+            # steal the donor's largest pending shard
+            i = max(queues[donor], key=lambda j: costs[j])
+            queues[donor].remove(i)
+        else:
+            times[node] = float("inf")  # idles forever; others drain their queues
+            continue
+        times[node] += costs[i] / node_speeds[node]
+        done[i] = True
+    makespan = max(t for t in times if t != float("inf"))
+
+    results = [worker_fn(s) for s in shards]  # real compute (correctness path)
+    return results, float(makespan)

@@ -1,0 +1,163 @@
+"""Logical-axis sharding rules (FSDP x TP x pod-DP) for every arch family.
+
+Rules operate on tree paths so they survive any stacking depth: a weight
+(…, D_in, D_out) shards (fsdp, tensor); 'output-side' projections (wo,
+out_proj, cm/wv) shard (tensor, fsdp) so the contraction dim is the sharded
+one; experts shard E over the tensor axis (expert parallelism); vectors and
+tiny adapters replicate. Dry-run meshes: ("data","model") and
+("pod","data","model") — fsdp = "data", tensor = "model", dp = ("pod","data").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    fsdp_axis: str = "data"
+    tensor_axis: str = "model"
+    dp_axes: tuple = ("data",)          # batch axes; multi-pod: ("pod","data")
+
+    def fsdp(self, dim: int, mesh) -> str | None:
+        return self.fsdp_axis if dim % mesh.shape[self.fsdp_axis] == 0 else None
+
+    def tensor(self, dim: int, mesh) -> str | None:
+        return self.tensor_axis if dim % mesh.shape[self.tensor_axis] == 0 else None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# matrices whose SECOND-to-last dim is the output/tensor dim (contract sharded)
+_OUT_SIDE = re.compile(r"(wo|out_proj)$")
+# MoE expert tensors: (E, D, F) / (E, F, D)
+_EXPERT = re.compile(r"mlp/(wi|wo)$")
+# embedding / head
+_EMBED = re.compile(r"embed/table$")
+_HEAD = re.compile(r"head$")
+
+
+def param_pspecs(params, mesh, rules: ShardingRules = ShardingRules()):
+    """PartitionSpec pytree for a model/optimizer parameter pytree."""
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if nd <= 1:
+            return P()  # norms, biases, scalars: replicate
+        lead = nd - 2  # stacking dims (L, or G,E for zamba/mamba groups)
+        d_in, d_out = shape[-2], shape[-1]
+
+        if _EXPERT.search(name) and nd >= 3:
+            # (..., E, D, F): experts over tensor axis, d-side over fsdp
+            e_dim = shape[-3]
+            e_ax = rules.tensor(e_dim, mesh)
+            if name.endswith("wi"):
+                return P(*([None] * (nd - 3)), e_ax, rules.fsdp(d_in, mesh), None)
+            return P(*([None] * (nd - 3)), e_ax, None, rules.fsdp(d_out, mesh))
+        if _EMBED.search(name):
+            return P(rules.tensor(d_in, mesh), rules.fsdp(d_out, mesh))  # (V, D)
+        if _HEAD.search(name):
+            return P(rules.fsdp(d_in, mesh), rules.tensor(d_out, mesh))  # (D, V)
+        if _OUT_SIDE.search(name):
+            return P(*([None] * lead), rules.tensor(d_in, mesh), rules.fsdp(d_out, mesh))
+        # default 'input-side' matrix (D_in, D_out_parallel)
+        return P(*([None] * lead), rules.fsdp(d_in, mesh), rules.tensor(d_out, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def state_pspecs(state_tree, params_specs):
+    """Optimizer state mirrors parameter sharding; scalars replicate."""
+
+    def spec(path, leaf):
+        return P()
+
+    # state = {"m": params-like, "v": params-like, "step": scalar}
+    return {
+        "m": params_specs,
+        "v": jax.tree.map(lambda s: s, params_specs),
+        "step": P(),
+    }
+
+
+def batch_pspec(batch, rules: ShardingRules = ShardingRules()):
+    """Shard leading (global-batch) dim over the dp axes."""
+    return jax.tree.map(lambda x: P(rules.dp_axes, *([None] * (np.ndim(x) - 1))), batch)
+
+
+def _divisible_axis(mesh, rules, *dims):
+    """First cache dim divisible by the tensor axis size, else None."""
+    t = mesh.shape[rules.tensor_axis]
+    for i, d in enumerate(dims):
+        if d % t == 0:
+            return i
+    return None
+
+
+def cache_pspecs(cache, mesh, rules: ShardingRules = ShardingRules(), batch: int = 1):
+    """Decode-cache shardings. Batch dim shards over dp axes when divisible;
+    the head/state dim shards over the tensor axis with a fallback chain
+    (KVH -> Dh -> S for KV caches; H for SSM/RWKV states; C for conv/shift)."""
+    dp = rules.dp_axes
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    t_ax = rules.tensor_axis
+    t = mesh.shape[t_ax]
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        b_ax = dp if (batch % n_dp == 0) else None
+        tail = name.rsplit("/", 1)[-1]
+        # identify the batch dim: first dim equal to `batch` after stack dims
+        try:
+            b_idx = next(i for i, d in enumerate(shape) if d == batch)
+        except StopIteration:
+            b_idx = None
+        spec = [None] * nd
+        if b_idx is not None and b_ax is not None:
+            spec[b_idx] = dp
+        if tail in ("k", "v"):  # (..., B, S, KVH, Dh)
+            kvh, dh = shape[-2], shape[-1]
+            s_len = shape[-3]
+            if kvh % t == 0:
+                spec[nd - 2] = t_ax
+            elif dh % t == 0:
+                spec[nd - 1] = t_ax
+            elif s_len % t == 0:
+                spec[nd - 3] = t_ax
+        elif tail == "c_kv":  # (..., B, S, R): sequence-shard, R contract-partial
+            if shape[-2] % t == 0:
+                spec[nd - 2] = t_ax
+        elif tail == "k_rope":  # small shared-rope cache: sequence-shard
+            if shape[-2] % t == 0:
+                spec[nd - 2] = t_ax
+        elif tail == "ssm":  # (..., B, H, N, P)
+            if shape[-3] % t == 0:
+                spec[nd - 3] = t_ax
+        elif tail == "wkv":  # (..., B, H, K, V)
+            if shape[-3] % t == 0:
+                spec[nd - 3] = t_ax
+        elif tail in ("conv", "tm_shift", "cm_shift"):  # channel-sharded
+            if shape[-1] % t == 0:
+                spec[nd - 1] = t_ax
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

@@ -1,0 +1,2 @@
+from repro.kernels import ops, ref
+from repro.kernels.ops import support_count

@@ -1,0 +1,31 @@
+"""Blocked jnp counting path: fuse the containment epilogue per candidate
+block so the (N, K) int32 intersection matrix is never fully materialised —
+the pure-JAX analogue of the Pallas kernel's VMEM tiling (used on the dry-run
+path, where Pallas cannot lower to the CPU backend)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def support_count_blocked(t_dense, c_dense, lengths, block_k: int = 512):
+    """Exact counts, intermediates bounded to (N, block_k)."""
+    n, i = t_dense.shape
+    k = c_dense.shape[0]
+    pad = (-k) % block_k
+    c_pad = jnp.pad(c_dense, ((0, pad), (0, 0)))
+    len_pad = jnp.pad(lengths.astype(jnp.int32), (0, pad), constant_values=-1)
+    cb = c_pad.reshape(-1, block_k, i)
+    lb = len_pad.reshape(-1, block_k)
+    t32 = t_dense.astype(jnp.bfloat16)
+
+    def one(args):
+        c_blk, l_blk = args
+        inter = jax.lax.dot_general(
+            t32, c_blk.astype(jnp.bfloat16).T, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return (inter == l_blk[None].astype(jnp.float32)).sum(0, dtype=jnp.int32)
+
+    counts = jax.lax.map(one, (cb, lb))
+    return counts.reshape(-1)[:k]

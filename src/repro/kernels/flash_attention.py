@@ -1,0 +1,108 @@
+"""Pallas TPU flash attention (causal, GQA-aware) — the LM stack's
+perf-critical attention contraction for TPU targets; the pure-JAX
+``models.attention.chunked_attention`` is the same dataflow and serves as the
+CPU/dry-run path.
+
+Dataflow per (batch·head, q-block): stream KV blocks through VMEM with the
+online-softmax running (m, l, acc) carried in scratch; logits never touch
+HBM. Grid = (B·H, Sq/bq, Sk/bk), Sk innermost. GQA is handled in the K/V
+BlockSpec index maps (kv head = q head // group), so no repeated KV in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, block_q, block_k, seq_kv):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_kv
+    if causal:
+        qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        mask &= qpos >= kpos
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = False):
+    """q: (B, Sq, H, D); k/v: (B, Skv, KVH, D) -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    group = h // kvh
+    scale = d ** -0.5
+
+    block_q = min(block_q, max(8, sq))
+    block_k = min(block_k, max(128, skv))
+    pq, pk = (-sq) % block_q, (-skv) % block_k
+    qf = jnp.moveaxis(jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))), 2, 1
+                      ).reshape(b * h, sq + pq, d)
+    kf = jnp.moveaxis(jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))), 2, 1
+                      ).reshape(b * kvh, skv + pk, d)
+    vf = jnp.moveaxis(jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))), 2, 1
+                      ).reshape(b * kvh, skv + pk, d)
+
+    def kv_index(bh, i, j):
+        return (bh // h) * kvh + (bh % h) // group, j, 0
+
+    grid = (b * h, (sq + pq) // block_q, (skv + pk) // block_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal,
+            block_q=block_q, block_k=block_k, seq_kv=skv,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq + pq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return jnp.moveaxis(out.reshape(b, h, sq + pq, d), 1, 2)[:, :sq]

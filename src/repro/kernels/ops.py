@@ -1,0 +1,94 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles shape padding to block multiples, impl dispatch ('auto' resolves to
+the Pallas kernel on TPU and the jnp oracle on CPU — interpret-mode Pallas is
+kept for tests, where it validates the kernel body semantics), and padding
+semantics (padded transactions are zero rows; padded candidates get |c| = -1
+so they can never match).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.support_count import support_count_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def resolve_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def support_count(
+    t_dense,
+    c_dense,
+    lengths,
+    *,
+    impl: str = "auto",
+    block_n: int = 256,
+    block_k: int = 256,
+    block_i: int = 512,
+    operand_dtype: str = "bf16",
+):
+    """Support counts of K candidates over N transactions (exact int32).
+
+    Accepts arbitrary (N, I, K); pads to kernel block multiples internally.
+    impl: auto | jnp | pallas | pallas_interpret | packed
+    """
+    impl = resolve_impl(impl)
+    n, i = t_dense.shape
+    k = c_dense.shape[0]
+    if impl == "jnp":
+        return ref.support_count_ref(t_dense, c_dense, lengths)
+    if impl == "jnp_blocked":
+        from repro.kernels.blocked import support_count_blocked
+
+        return support_count_blocked(t_dense, c_dense, lengths)
+    if impl == "packed":
+        raise ValueError("packed impl requires pre-packed uint32 operands; use ref.support_count_packed_ref")
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
+
+    # Shrink blocks for small problems (keep the 128-lane minor alignment).
+    block_n = min(block_n, _round_up(n, 8))
+    block_k = min(block_k, _round_up(k, 128))
+    block_i = min(block_i, _round_up(i, 128))
+    np_, kp, ip = _round_up(n, block_n), _round_up(k, block_k), _round_up(i, block_i)
+    t_p = jnp.pad(t_dense, ((0, np_ - n), (0, ip - i)))
+    c_p = jnp.pad(c_dense, ((0, kp - k), (0, ip - i)))
+    len_p = jnp.pad(lengths.astype(jnp.int32), (0, kp - k), constant_values=-1)
+    counts = support_count_pallas(
+        t_p,
+        c_p,
+        len_p,
+        block_n=block_n,
+        block_k=block_k,
+        block_i=block_i,
+        operand_dtype=operand_dtype,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return counts[:k]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, impl: str = "auto", block_q: int = 512, block_k: int = 512):
+    """Dispatch for attention: Pallas flash kernel on TPU, chunked jnp otherwise."""
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        from repro.models.attention import chunked_attention
+
+        return chunked_attention(q, k, v, causal=causal)
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    return flash_attention_pallas(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=(impl == "pallas_interpret")
+    )

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def support_count_ref(t_dense, c_dense, lengths):
+    """Exact support counts.
+
+    t_dense: (N, I) {0,1} int8 transactions
+    c_dense: (K, I) {0,1} int8 candidate itemsets
+    lengths: (K,)   int32 itemset sizes (|c| >= 1; padded rows use -1)
+    returns: (K,)   int32  —  #transactions t with c ⊆ t
+    """
+    inter = jnp.matmul(
+        t_dense.astype(jnp.int32), c_dense.astype(jnp.int32).T
+    )  # (N, K) intersection sizes
+    contained = inter == lengths[None, :].astype(jnp.int32)
+    return jnp.sum(contained, axis=0, dtype=jnp.int32)
+
+
+def support_count_packed_ref(t_packed, c_packed, block_k: int = 256):
+    """Bitset/popcount oracle over packed uint32 words (VPU-style path).
+
+    t_packed: (N, W) uint32, c_packed: (K, W) uint32.
+    Containment: (t & c) == c for every word. Blocked over K to bound memory.
+    """
+    n, w = t_packed.shape
+    k, _ = c_packed.shape
+    pad = (-k) % block_k
+    c_pad = jnp.pad(c_packed, ((0, pad), (0, 0)), constant_values=jnp.uint32(0xFFFFFFFF))
+
+    def one_block(c_blk):
+        # (N, 1, W) & (1, bk, W)
+        inter = t_packed[:, None, :] & c_blk[None, :, :]
+        contained = jnp.all(inter == c_blk[None, :, :], axis=-1)
+        return contained.sum(axis=0, dtype=jnp.int32)
+
+    blocks = c_pad.reshape(-1, block_k, w)
+    counts = jax.lax.map(one_block, blocks).reshape(-1)
+    return counts[:k]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Reference attention (fp32 softmax), GQA-aware.
+
+    q: (B, Sq, Hq, D), k/v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    scale = (d ** -0.5) if scale is None else scale
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        # decode offset: queries occupy the last sq positions of the kv axis
+        qpos = jnp.arange(sq) + (skv - sq)
+        mask = qpos[:, None] >= jnp.arange(skv)[None, :]
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)

@@ -1,0 +1,229 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: .lower().compile() for every (arch × shape × mesh) cell.
+
+Per cell: build ShapeDtypeStruct inputs + shardings (launch.specs), jit the
+step (train_step / prefill / decode) with explicit in/out shardings + donation,
+compile for the 16x16 single-pod and (2,16,16) multi-pod mesh, then record:
+  - memory_analysis()          (fits-on-chip proof: args/temps/aliasing)
+  - cost_analysis()            (raw XLA numbers — scan bodies counted once)
+  - hlo_analysis.summarize()   (trip-count-corrected flops / bytes / collectives)
+  - roofline terms             (launch.roofline; EXPERIMENTS.md §Roofline)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1p5_110b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out experiments/dryrun   (subprocess per cell)
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES, is_skipped
+    from repro.launch import hlo_analysis
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import count_params, model_flops, roofline_terms
+    from repro.launch.specs import arch_for_mesh, cell_shardings, rules_for
+    from repro.models.shard_ctx import activation_sharding
+    from repro.models.transformer import decode_step, prefill_step
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_loop import build_train_step
+
+    cfg = get_config(arch_id)
+    if is_skipped(cfg, shape_name):
+        return {
+            "arch": arch_id, "shape": shape_name, "mesh": "multi" if multi_pod else "single",
+            "status": "skipped",
+            "reason": "long_500k reserved for sub-quadratic families (DESIGN.md §4)",
+        }
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = len(mesh.devices.ravel())
+    cfg = arch_for_mesh(cfg, mesh)
+    cell = cell_shardings(cfg, shape_name, mesh)
+    kind = cell["kind"]
+    rules = rules_for(mesh)
+    act_ctx = activation_sharding(mesh, dp_axes=rules.dp_axes, tensor_axis=rules.tensor_axis)
+
+    t0 = time.time()
+    with act_ctx:
+        lowered = _lower(kind, cfg, cell, shape)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return _record(arch_id, shape_name, multi_pod, chips, kind, cfg, shape,
+                   compiled, t_lower, t_compile)
+
+
+def _lower(kind, cfg, cell, shape):
+    import jax
+
+    from repro.models.transformer import decode_step, prefill_step
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_loop import build_train_step
+
+    if kind == "train":
+        step = build_train_step(cfg, AdamWConfig())
+        jitted = jax.jit(
+            step,
+            in_shardings=(cell["state_sh"], cell["batch_sh"]),
+            out_shardings=(cell["state_sh"], None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(cell["state_sds"], cell["batch_sds"])
+    elif kind == "prefill":
+        cache_len = shape["seq_len"]
+
+        def pf(params, batch):
+            return prefill_step(params, cfg, batch, cache_len)
+
+        jitted = jax.jit(
+            pf,
+            in_shardings=(cell["params_sh"], cell["batch_sh"]),
+            out_shardings=(None, cell["cache_sh"]),
+        )
+        lowered = jitted.lower(cell["params_sds"], cell["batch_sds"])
+    else:  # decode
+
+        def dec(params, cache, tokens, pos):
+            return decode_step(params, cfg, cache, tokens, pos)
+
+        jitted = jax.jit(
+            dec,
+            in_shardings=(
+                cell["params_sh"],
+                cell["cache_sh"],
+                cell["batch_sh"]["tokens"],
+                cell["batch_sh"]["pos"],
+            ),
+            out_shardings=(None, cell["cache_sh"]),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(
+            cell["params_sds"], cell["cache_sds"],
+            cell["batch_sds"]["tokens"], cell["batch_sds"]["pos"],
+        )
+    return lowered
+
+
+def _record(arch_id, shape_name, multi_pod, chips, kind, cfg, shape, compiled, t_lower, t_compile):
+    from repro.launch import hlo_analysis
+    from repro.launch.roofline import count_params, model_flops, roofline_terms
+
+    mem = compiled.memory_analysis()
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        cost = {k: float(v) for k, v in cost.items() if k in ("flops", "bytes accessed")}
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+
+    text = compiled.as_text()
+    hlo = hlo_analysis.summarize(text)
+    del text
+
+    mf = model_flops(cfg, shape)
+    rl = roofline_terms(hlo["flops"], hlo["hbm_bytes"], hlo["collective_bytes"])
+    params_count = count_params(cfg)
+
+    return {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": chips,
+        "status": "ok",
+        "kind": kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_dev": mem.argument_size_in_bytes,
+            "output_bytes_per_dev": mem.output_size_in_bytes,
+            "temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "alias_bytes_per_dev": mem.alias_size_in_bytes,
+        },
+        "xla_cost_raw": cost,
+        "hlo": hlo,
+        "params": params_count,
+        "model_flops_global": mf,
+        "model_flops_per_dev": mf / chips,
+        "useful_flops_ratio": (mf / chips) / max(hlo["flops"], 1.0),
+        "roofline": {
+            "compute_s": rl.compute_s,
+            "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s,
+            "dominant": rl.dominant,
+            "bound_s": rl.bound_s,
+            "compute_fraction": rl.compute_fraction,
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="run every cell in subprocesses")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import ARCH_IDS
+        from repro.configs.shapes import SHAPES
+
+        os.makedirs(args.out, exist_ok=True)
+        cells = [
+            (a, s, m)
+            for a in ARCH_IDS
+            if a != "apriori"
+            for s in SHAPES
+            for m in (["single", "multi"] if args.mesh == "both" else [args.mesh])
+        ]
+        failures = 0
+        for arch, shp, mesh_kind in cells:
+            out_file = os.path.join(args.out, f"{arch}--{shp}--{mesh_kind}.json")
+            if os.path.exists(out_file):
+                print(f"[skip-cached] {arch} {shp} {mesh_kind}")
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shp, "--mesh", mesh_kind, "--out", out_file,
+            ]
+            t0 = time.time()
+            proc = subprocess.run(cmd, capture_output=True, text=True, timeout=args.timeout)
+            status = "OK" if proc.returncode == 0 else "FAIL"
+            if proc.returncode != 0:
+                failures += 1
+                with open(out_file, "w") as f:
+                    json.dump({"arch": arch, "shape": shp, "mesh": mesh_kind,
+                               "status": "error", "stderr": proc.stderr[-4000:]}, f, indent=1)
+            print(f"[{status}] {arch} {shp} {mesh_kind}  ({time.time()-t0:.0f}s)")
+        print(f"done; {failures} failures")
+        sys.exit(1 if failures else 0)
+
+    rec = lower_cell(args.arch, args.shape, args.mesh == "multi")
+    js = json.dumps(rec, indent=1)
+    if args.out and args.out.endswith(".json"):
+        with open(args.out, "w") as f:
+            f.write(js)
+    print(js)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Fill EXPERIMENTS.md table placeholders from experiments/dryrun/*.json."""
+
+from repro.launch.report import dryrun_table, load_cells, roofline_table, summary_stats
+
+
+def main():
+    cells = load_cells()
+    stats = summary_stats(cells)
+    print("sweep:", stats)
+    md = open("EXPERIMENTS.md").read()
+    md = md.replace("<!-- DRYRUN_TABLE -->", dryrun_table(cells, "single"))
+    md = md.replace("<!-- DRYRUN_TABLE_MULTI -->", dryrun_table(cells, "multi"))
+    md = md.replace("<!-- ROOFLINE_TABLE -->", roofline_table(cells))
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md tables filled")
+
+
+if __name__ == "__main__":
+    main()

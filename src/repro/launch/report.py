@@ -1,0 +1,100 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md tables."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(path="experiments/dryrun"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        txt = open(f).read()
+        start = txt.find("{")
+        if start < 0:
+            continue
+        try:
+            cells.append(json.loads(txt[start:]))
+        except json.JSONDecodeError:
+            continue
+    return cells
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}GB"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}MB"
+    return f"{b/1e3:.0f}KB"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def dryrun_table(cells, mesh="single"):
+    rows = [
+        "| arch | shape | status | compile | args/dev | temps/dev | collectives (count) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | SKIP (full-attn @500k) | — | — | — | — |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | **{c['status']}** | — | — | — | — |")
+            continue
+        m = c["memory"]
+        counts = ", ".join(f"{k}:{int(v)}" for k, v in sorted(c["hlo"]["collective_counts"].items()))
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | ok | {c['compile_s']:.0f}s "
+            f"| {fmt_bytes(m['argument_bytes_per_dev'])} | {fmt_bytes(m['temp_bytes_per_dev'])} "
+            f"| {counts} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(cells):
+    rows = [
+        "| arch | shape | FLOPs/dev | HBM B/dev | coll B/dev | compute | memory | collective | dominant | MODEL/HLO |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("mesh") != "single" or c["status"] != "ok":
+            continue
+        h, r = c["hlo"], c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {h['flops']:.2e} | {h['hbm_bytes']:.2e} "
+            f"| {h['collective_bytes']:.2e} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** | {c['useful_flops_ratio']:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def summary_stats(cells):
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    failed = [c for c in cells if c["status"] not in ("ok", "skipped")]
+    return {
+        "ok": len(ok),
+        "skipped": len(skipped),
+        "failed": len(failed),
+        "single": len([c for c in ok if c["mesh"] == "single"]),
+        "multi": len([c for c in ok if c["mesh"] == "multi"]),
+    }
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(summary_stats(cells))
+    print()
+    print(roofline_table(cells))

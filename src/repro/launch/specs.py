@@ -1,0 +1,141 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape × mesh)
+cell — the dry-run's input layer. Nothing here allocates device memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.distributed.sharding import ShardingRules, cache_pspecs, param_pspecs
+from repro.models.transformer import init_decode_cache, init_model
+from repro.training.optimizer import adamw_init
+
+
+def rules_for(mesh) -> ShardingRules:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return ShardingRules(fsdp_axis="data", tensor_axis="model", dp_axes=dp)
+
+
+def arch_for_mesh(cfg, mesh):
+    """Bind mesh-dependent knobs (MoE routing groups = # data shards)."""
+    if cfg.moe is not None:
+        dp = math.prod(mesh.shape[a] for a in (("pod", "data") if "pod" in mesh.axis_names else ("data",)))
+        cfg = dataclasses.replace(cfg, moe_groups=dp)
+    return cfg
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def params_sds(cfg, dtype=None):
+    out = jax.eval_shape(lambda: init_model(jax.random.key(0), cfg))
+    if dtype is not None:
+        out = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), out)
+    return out
+
+
+def train_state_sds(cfg):
+    p = params_sds(cfg)
+    opt = jax.eval_shape(lambda: adamw_init(jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p)))
+    return {"params": p, "opt": opt}
+
+
+def batch_sds(cfg, shape_name: str):
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    if kind == "decode":
+        if cfg.frontend == "frames":
+            tok = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)
+        else:
+            tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+        return {"tokens": tok, "pos": pos}
+    # train / prefill: full-sequence inputs
+    batch = {}
+    if cfg.frontend == "tokens":
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    elif cfg.frontend == "frames":
+        batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    elif cfg.frontend == "vlm":
+        s_text = s - cfg.num_patches
+        batch["patches"] = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    if kind == "train":
+        s_lab = (s - cfg.num_patches) if cfg.frontend == "vlm" else s
+        batch["labels"] = jax.ShapeDtypeStruct((b, s_lab), jnp.int32)
+    return batch
+
+
+def cache_sds(cfg, shape_name: str):
+    sh = SHAPES[shape_name]
+    return jax.eval_shape(lambda: init_decode_cache(cfg, sh["global_batch"], sh["seq_len"]))
+
+
+def batch_shardings(batch, mesh, rules: ShardingRules):
+    n_dp = math.prod(mesh.shape[a] for a in rules.dp_axes)
+
+    def spec(x):
+        if x.shape and x.shape[0] % n_dp == 0:
+            return P(rules.dp_axes, *([None] * (len(x.shape) - 1)))
+        return P(*([None] * len(x.shape)))
+
+    return jax.tree.map(lambda x: NamedSharding(mesh, spec(x)), batch)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def cell_shardings(cfg, shape_name: str, mesh):
+    """-> dict with sds + shardings for the cell's step function."""
+    rules = rules_for(mesh)
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    out = {"kind": kind, "rules": rules}
+
+    if kind == "train":
+        state = train_state_sds(cfg)
+        pspecs = param_pspecs(state["params"], mesh, rules)
+        state_spec = {"params": pspecs, "opt": {"m": pspecs, "v": pspecs, "step": P()}}
+        batch = batch_sds(cfg, shape_name)
+        out.update(
+            state_sds=state,
+            state_sh=named(mesh, state_spec),
+            batch_sds=batch,
+            batch_sh=batch_shardings(batch, mesh, rules),
+        )
+        return out
+
+    p_sds = params_sds(cfg)  # serving keeps fp32 master layout (cast in compute)
+    pspecs = param_pspecs(p_sds, mesh, rules)
+    out.update(params_sds=p_sds, params_sh=named(mesh, pspecs))
+    if kind == "prefill":
+        batch = batch_sds(cfg, shape_name)
+        out.update(batch_sds=batch, batch_sh=batch_shardings(batch, mesh, rules))
+        cache = cache_sds(cfg, shape_name)
+        out.update(
+            cache_sds=cache,
+            cache_sh=named(mesh, cache_pspecs(cache, mesh, rules, batch=sh["global_batch"])),
+        )
+    else:  # decode
+        cache = cache_sds(cfg, shape_name)
+        batch = batch_sds(cfg, shape_name)
+        out.update(
+            cache_sds=cache,
+            cache_sh=named(mesh, cache_pspecs(cache, mesh, rules, batch=sh["global_batch"])),
+            batch_sds=batch,
+            batch_sh=batch_shardings(batch, mesh, rules),
+        )
+    return out

@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, MoEConfig, MLAConfig, SSMConfig
+from repro.models.transformer import init_model, forward, loss_fn, init_decode_cache, decode_step

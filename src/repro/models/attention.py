@@ -1,0 +1,272 @@
+"""Attention blocks: GQA (optional qkv-bias) and MLA (latent KV compression).
+
+Prefill/train uses ``chunked_attention`` — an online-softmax scan over KV
+blocks (flash-attention dataflow in pure JAX), so the S×S score matrix is
+never materialised; on TPU backends kernels/flash_attention.py provides the
+Pallas version of the same contraction. Decode attends one query against the
+(padded, position-masked) cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rmsnorm_init, rmsnorm_apply, vzero
+
+_NEG = -1e30
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, block_k: int = 512, q_offset=0):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, Dqk); k: (B, Sk, KVH, Dqk); v: (B, Sk, KVH, Dv) — MLA uses
+    Dv != Dqk. H % KVH == 0.
+    q_offset: global position of q[0] relative to k[0] (prefill: Sk - Sq).
+    """
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    dv = v.shape[-1]
+    g = h // kvh
+    scale = d ** -0.5
+    qr = (q * scale).reshape(b, sq, kvh, g, d)
+
+    pad = (-sk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblk = k.shape[1] // block_k
+    kb = jnp.moveaxis(k.reshape(b, nblk, block_k, kvh, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nblk, block_k, kvh, dv), 1, 0)
+
+    qpos = q_offset + jnp.arange(sq)
+
+    def step(carry, blk):
+        m, l, acc, blk_idx = carry
+        kblk, vblk = blk
+        logits = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", qr, kblk, preferred_element_type=jnp.float32
+        )
+        kpos = blk_idx * block_k + jnp.arange(block_k)
+        mask = kpos[None, :] < sk  # padding
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        logits = jnp.where(mask[None, :, None, None, :], logits, _NEG)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vblk.dtype), vblk, preferred_element_type=jnp.float32
+        )
+        return (m_new, l_new, acc_new, blk_idx + 1), None
+
+    vz = vzero(qr)  # vma-correct carry seeds (see layers.vzero)
+    m0 = jnp.full((b, sq, kvh, g), _NEG, jnp.float32) + vz
+    l0 = jnp.zeros((b, sq, kvh, g), jnp.float32) + vz
+    acc0 = jnp.zeros((b, sq, kvh, g, dv), jnp.float32) + vz
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, acc0, jnp.int32(0)), (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """One-step attention: q (B, 1, H, Dqk) vs cache (B, S, KVH, Dqk/Dv);
+    positions > pos are masked (cache is pre-allocated to max length)."""
+    b, _, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    dv = v_cache.shape[-1]
+    g = h // kvh
+    qr = (q[:, 0] * (d ** -0.5)).reshape(b, kvh, g, d)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache, preferred_element_type=jnp.float32)
+    valid = jnp.arange(s)[None, :] <= pos[:, None]  # (B, S)
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ GQA ----
+def gqa_init(key, cfg):
+    d, h, kvh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * dh)),
+        "wk": dense_init(ks[1], (d, kvh * dh)),
+        "wv": dense_init(ks[2], (d, kvh * dh)),
+        "wo": dense_init(ks[3], (h * dh, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((kvh * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((kvh * dh,), jnp.float32)
+    return p
+
+
+def _proj(x, w, b=None, out_side=False):
+    from repro.models.shard_ctx import weight_use
+
+    y = x @ weight_use(w.astype(x.dtype), out_side=out_side)
+    return y if b is None else y + b.astype(x.dtype)
+
+
+def gqa_qkv(p, x, positions, cfg):
+    b, s, _ = x.shape
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _proj(x, p["wq"], p.get("bq")).reshape(b, s, h, dh)
+    k = _proj(x, p["wk"], p.get("bk")).reshape(b, s, kvh, dh)
+    v = _proj(x, p["wv"], p.get("bv")).reshape(b, s, kvh, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(p, x, cfg):
+    """Train/prefill self-attention. x: (B, S, D)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = gqa_qkv(p, x, positions, cfg)
+    out = chunked_attention(q, k, v, causal=True, block_k=cfg.attn_block_k)
+    return _proj(out.reshape(b, s, -1), p["wo"], out_side=True)
+
+
+def gqa_prefill(p, x, cfg, cache_len: int):
+    """Prefill returning output AND the filled (padded) KV cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = gqa_qkv(p, x, positions, cfg)
+    out = chunked_attention(q, k, v, causal=True, block_k=cfg.attn_block_k)
+    pad = cache_len - s
+    k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return _proj(out.reshape(b, s, -1), p["wo"], out_side=True), {"k": k_c, "v": v_c}
+
+
+def gqa_decode(p, x, cfg, cache, pos):
+    """x: (B, 1, D); cache {'k','v'}: (B, S, KVH, Dh); pos: (B,) current index."""
+    b = x.shape[0]
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _proj(x, p["wq"], p.get("bq")).reshape(b, 1, h, dh)
+    k = _proj(x, p["wk"], p.get("bk")).reshape(b, 1, kvh, dh)
+    v = _proj(x, p["wv"], p.get("bv")).reshape(b, 1, kvh, dh)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    # per-row positions (continuous batching): one-hot masked write
+    k_cache = _write_cache(cache["k"], k, pos)
+    v_cache = _write_cache(cache["v"], v, pos)
+    out = decode_attention(q, k_cache, v_cache, pos)
+    return _proj(out.reshape(b, 1, -1), p["wo"], out_side=True), {"k": k_cache, "v": v_cache}
+
+
+def _write_cache(cache, new, pos):
+    """Write (B, 1, ...) `new` at per-row positions `pos` into (B, S, ...).
+
+    Scatter (not arithmetic masking): only the touched rows move, and with
+    cache donation XLA updates in place — O(B·row) HBM traffic per token
+    instead of O(B·S·row) (perf iteration #1, EXPERIMENTS.md §Perf)."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), pos].set(new[:, 0].astype(cache.dtype))
+
+
+# ------------------------------------------------------------------ MLA ----
+def mla_init(key, cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank)),
+        "q_norm": rmsnorm_init(m.q_lora_rank),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h * qk_dim)),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_dim)),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank),
+        "wkv_b": dense_init(ks[3], (m.kv_lora_rank, h * (m.qk_nope_dim + m.v_head_dim))),
+        "wo": dense_init(ks[4], (h * m.v_head_dim, d)),
+    }
+
+
+def _mla_qkv(p, x, positions, cfg):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    from repro.models.shard_ctx import weight_use as _wu
+    q = rmsnorm_apply(p["q_norm"], x @ _wu(p["wq_a"].astype(x.dtype)))
+    q = (q @ _wu(p["wq_b"].astype(x.dtype))).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ _wu(p["wkv_a"].astype(x.dtype))  # (B, S, kv_lora + rope)
+    c_kv, k_rope = kv[..., : m.kv_lora_rank], kv[..., m.kv_lora_rank :]
+    c_kv = rmsnorm_apply(p["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # shared head
+    return q_nope, q_rope, c_kv, k_rope[:, :, 0, :]
+
+
+def _mla_expand_kv(p, c_kv, k_rope, cfg):
+    """Latent -> per-head K/V. k: [k_nope | k_rope(shared)], v: v_head_dim."""
+    m = cfg.mla
+    b, s, _ = c_kv.shape
+    h = cfg.num_heads
+    from repro.models.shard_ctx import weight_use as _wu2
+    kv = (c_kv @ _wu2(p["wkv_b"].astype(c_kv.dtype))).reshape(b, s, h, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim :]
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, m.qk_rope_dim))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+
+def mla_apply(p, x, cfg):
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, positions, cfg)
+    k, v = _mla_expand_kv(p, c_kv, k_rope, cfg)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = chunked_attention(q, k, v, causal=True, block_k=cfg.attn_block_k)
+    return _proj(out.reshape(b, s, -1), p["wo"], out_side=True)
+
+
+def mla_prefill(p, x, cfg, cache_len: int):
+    """MLA caches the LATENT (c_kv, k_rope) — the paper-sized cache win."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, positions, cfg)
+    k, v = _mla_expand_kv(p, c_kv, k_rope, cfg)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = chunked_attention(q, k, v, causal=True, block_k=cfg.attn_block_k)
+    pad = cache_len - s
+    cache = {
+        "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+        "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+    }
+    return _proj(out.reshape(b, s, -1), p["wo"], out_side=True), cache
+
+
+def mla_decode(p, x, cfg, cache, pos):
+    """Matrix-absorbed MLA decode (DeepSeek-V2 §2.1 trick): attention runs
+    directly over the latent cache — per-head K/V are never materialised, so
+    the decode working set is O(S · kv_lora_rank), not O(S · H · d_head)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    positions = pos[:, None]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(p, x, positions, cfg)
+    s = cache["c_kv"].shape[1]
+    bidx = jnp.arange(b)
+    c_kv = cache["c_kv"].at[bidx, pos].set(c_kv_new[:, 0].astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[bidx, pos].set(k_rope_new[:, 0].astype(cache["k_rope"].dtype))
+
+    wkv_b = p["wkv_b"].astype(x.dtype).reshape(m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim)
+    wk_b, wv_b = wkv_b[..., : m.qk_nope_dim], wkv_b[..., m.qk_nope_dim :]
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    # absorb W^UK into q:  (B,H,nope)·(lora,H,nope) -> (B,H,lora)
+    q_eff = jnp.einsum("bhn,lhn->bhl", q_nope[:, 0] * scale, wk_b)
+    logits = jnp.einsum("bhl,bsl->bhs", q_eff, c_kv, preferred_element_type=jnp.float32)
+    logits += jnp.einsum("bhr,bsr->bhs", q_rope[:, 0] * scale, k_rope,
+                         preferred_element_type=jnp.float32)
+    valid = jnp.arange(s)[None, :] <= pos[:, None]
+    logits = jnp.where(valid[:, None, :], logits, _NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", probs.astype(c_kv.dtype), c_kv)
+    out = jnp.einsum("bhl,lhv->bhv", o_lat, wv_b).reshape(b, 1, -1)
+    return _proj(out, p["wo"], out_side=True), {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,125 @@
+"""Unified model configuration for the assigned-architecture zoo."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    padded_experts: Optional[int] = None   # pad E for mesh divisibility (granite 40 -> 48)
+    router_jitter: float = 0.0
+
+    @property
+    def e_padded(self) -> int:
+        return self.padded_experts or self.num_experts
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64            # N
+    head_dim: int = 64             # P
+    expand: int = 2                # d_inner = expand * d_model
+    n_groups: int = 1              # B/C groups (G)
+    conv_width: int = 4
+    chunk: int = 256               # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    lora_dim: int = 32             # ddlerp / decay adapter rank
+    d_ff: int = 7168
+    chunk: int = 32                # chunked-WKV length (<=1 = per-step scan oracle)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # block family: 'attn' (dense/MoE transformer), 'mamba2', 'rwkv6',
+    # 'zamba_hybrid' (mamba2 backbone + ONE shared attn block every share_every)
+    block_type: str = "attn"
+    attn_type: str = "gqa"         # gqa | mla
+    qkv_bias: bool = False
+    share_every: int = 6           # zamba: shared block period
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    act: str = "swiglu"            # swiglu | gelu
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+
+    # modality frontend: 'tokens' | 'frames' (audio: precomputed frame embeds)
+    # | 'vlm' (precomputed patch embeds prepended to token embeds)
+    frontend: str = "tokens"
+    num_patches: int = 0           # vlm: patches per image
+
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    attn_block_k: int = 512        # chunked-attention kv block
+    loss_chunk: int = 1024         # CE seq-chunking (0/indivisible = unchunked)
+    moe_groups: int = 1            # MoE routing groups (= data shards on the mesh)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            num_layers=max(2, self.share_every if self.block_type == "zamba_hybrid" else 2),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 4) if self.num_kv_heads else 0,
+            d_ff=256,
+            vocab_size=251,
+            compute_dtype="float32",
+            remat=False,
+            attn_block_k=64,
+        )
+        if self.block_type == "zamba_hybrid":
+            small["num_layers"] = 4
+            small["share_every"] = 2
+        if self.moe is not None:
+            # capacity_factor = E/top_k -> drop-free routing, so the reduced
+            # config keeps exact prefill/decode equivalence (capacity drops
+            # are non-causal by construction).
+            small["moe"] = MoEConfig(
+                num_experts=4, top_k=2, d_ff_expert=64, padded_experts=4, capacity_factor=2.0
+            )
+        if self.mla is not None:
+            small["mla"] = MLAConfig(q_lora_rank=48, kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16)
+        if self.ssm is not None:
+            small["ssm"] = SSMConfig(state_dim=16, head_dim=16, chunk=8)
+        if self.rwkv is not None:
+            small["rwkv"] = RWKVConfig(head_dim=16, lora_dim=8, d_ff=192)
+        if self.frontend == "vlm":
+            small["num_patches"] = 16
+        small.update(overrides)
+        return dataclasses.replace(self, **small)

@@ -1,0 +1,113 @@
+"""Shared layers: norms, RoPE, FFNs, embeddings. Functional style — every
+module is ``init(key, ...) -> params pytree`` + ``apply(params, x, ...)``;
+stacked layers carry a leading L dim and are driven by lax.scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, in_axis: int = 0):
+    """Truncated-normal fan-in init (fp32 master params)."""
+    fan_in = shape[in_axis]
+    scale = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale)
+
+
+def vzero(*arrays):
+    """Scalar 0.0 carrying the varying-manual-axes of `arrays`.
+
+    Under partial-manual shard_map (cross-pod compressed training), scan
+    carries seeded with plain constants are pod-INVARIANT while the scanned
+    inputs are pod-VARYING — jax rejects the carry-type mismatch. Seeding
+    with `const + vzero(inputs)` gives the carry the right vma; outside
+    shard_map it folds to 0."""
+    z = jnp.zeros((), jnp.float32)
+    for a in arrays:
+        z = z + (a * 0).sum().astype(jnp.float32)
+    return z
+
+
+# ---------------------------------------------------------------- norms ----
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def norm_init(kind: str, d: int):
+    return rmsnorm_init(d) if kind == "rmsnorm" else layernorm_init(d)
+
+
+def norm_apply(kind: str, p, x):
+    return rmsnorm_apply(p, x) if kind == "rmsnorm" else layernorm_apply(p, x)
+
+
+# ----------------------------------------------------------------- rope ----
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding, split-half convention.
+
+    x: (..., S, H, D) with D even; positions: broadcastable to (..., S).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ ffn ----
+def ffn_init(key, d: int, d_ff: int, act: str):
+    k1, k2 = jax.random.split(key)
+    if act == "swiglu":
+        return {"wi": dense_init(k1, (d, 2 * d_ff)), "wo": dense_init(k2, (d_ff, d))}
+    return {"wi": dense_init(k1, (d, d_ff)), "wo": dense_init(k2, (d_ff, d))}
+
+
+def ffn_apply(p, x, act: str):
+    from repro.models.shard_ctx import weight_use
+
+    dt = x.dtype
+    h = x @ weight_use(p["wi"].astype(dt))
+    if act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(h)
+    return h @ weight_use(p["wo"].astype(dt), out_side=True)
+
+
+# ------------------------------------------------------------ embedding ----
+def embed_init(key, vocab: int, d: int):
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32)}
+
+
+def embed_apply(p, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed_apply(p, x):
+    """Logits in fp32 (softmax numerics)."""
+    return (x @ p["table"].astype(x.dtype).T).astype(jnp.float32)

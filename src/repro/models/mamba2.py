@@ -1,0 +1,221 @@
+"""Mamba-2 (SSD) block — chunked state-space dual form (arXiv:2405.21060).
+
+Train/prefill uses the chunk decomposition: intra-chunk causal (C·Bᵀ ⊙ decay)
+matmuls (MXU-friendly) + inter-chunk state propagation via an associative
+scan over chunk states (log-depth). Decode is the exact linear recurrence
+``S ← a·S + dt·B⊗x ; y = C·S``. A naive per-step scan oracle lives here too
+for the equivalence tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm_apply
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.head_dim, s.state_dim, s.n_groups
+
+
+def mamba2_init(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, h, p_dim, n, g = _dims(cfg)
+    conv_dim = d_inner + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z (d_inner) | xBC (conv_dim) | dt (h)]
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner + 2 * g * n + h)),
+        "conv_w": jax.random.normal(ks[1], (s.conv_width, conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_inner,), jnp.float32)},
+        "out_proj": dense_init(ks[3], (d_inner, d)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, width W. x: (B, L, C); w: (W, C)."""
+    w_ = w.astype(x.dtype)
+    width = w_.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w_[i] for i in range(width))
+    return out + b.astype(x.dtype)
+
+
+def _split_proj(p, x, cfg):
+    d_inner, h, p_dim, n, g = _dims(cfg)
+    from repro.models.shard_ctx import weight_use
+
+    zxbcdt = x @ weight_use(p["in_proj"].astype(x.dtype))
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + d_inner + 2 * g * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _conv_split(xbc, cfg):
+    d_inner, h, p_dim, n, g = _dims(cfg)
+    xi = xbc[..., :d_inner]
+    b_ = xbc[..., d_inner : d_inner + g * n]
+    c_ = xbc[..., d_inner + g * n :]
+    return xi, b_, c_
+
+
+def mamba2_apply(p, x, cfg):
+    """Chunked SSD forward. x: (B, L, D); L is padded internally to the chunk
+    multiple (causality makes the zero tail inert for the kept positions)."""
+    s = cfg.ssm
+    d_inner, h, p_dim, n, g = _dims(cfg)
+    bsz, l_in, _ = x.shape
+    q = s.chunk
+    pad = (-l_in) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    l = l_in + pad
+    nc = l // q
+
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xi, b_, c_ = _conv_split(xbc, cfg)
+
+    xh = xi.reshape(bsz, l, h, p_dim)
+    bh = b_.reshape(bsz, l, g, n)
+    ch = c_.reshape(bsz, l, g, n)
+    # broadcast groups over heads (g divides h)
+    rep = h // g
+    bh = jnp.repeat(bh, rep, axis=2)  # (B, L, H, N)
+    ch = jnp.repeat(ch, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, L, H)
+    a = -jnp.exp(p["a_log"])                                     # (H,)
+    log_decay = dt * a[None, None, :]                            # (B, L, H)  (<= 0)
+
+    # ---- chunk views ----
+    xc = xh.reshape(bsz, nc, q, h, p_dim)
+    bc = bh.reshape(bsz, nc, q, h, n)
+    cc = ch.reshape(bsz, nc, q, h, n)
+    dtc = dt.reshape(bsz, nc, q, h)
+    ld = log_decay.reshape(bsz, nc, q, h)
+    cum = jnp.cumsum(ld, axis=2)                                 # within-chunk cumulative
+
+    # ---- intra-chunk: att[q,k] = (C_q·B_k) * exp(cum_q - cum_k) * dt_k, q>=k ----
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc, preferred_element_type=jnp.float32)
+    dq = cum.transpose(0, 1, 3, 2)                               # (B, nc, H, Q)
+    gap = dq[..., :, None] - dq[..., None, :]                    # (B, nc, H, Q, K)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    att = scores * jnp.where(causal, jnp.exp(gap), 0.0)
+    att = att * dtc.transpose(0, 1, 3, 2)[..., None, :]          # * dt_k
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", att.astype(xc.dtype), xc,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk states: S_c = Σ_k exp(cum_last - cum_k)·dt_k·B_k⊗x_k ----
+    last = cum[:, :, -1:, :]                                     # (B, nc, 1, H)
+    w_k = jnp.exp(last - cum) * dtc                              # (B, nc, Q, H)
+    s_c = jnp.einsum("bcqhn,bcqhp,bcqh->bchnp", bc, xc, w_k.astype(xc.dtype),
+                     preferred_element_type=jnp.float32)         # (B, nc, H, N, P)
+    chunk_decay = jnp.exp(last[:, :, 0, :])                      # (B, nc, H)
+
+    # ---- inter-chunk: associative scan  (d, S) ∘ (d', S') = (dd', S·d' + S') ----
+    def combine(x1, x2):
+        d1, s1 = x1
+        d2, s2 = x2
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dec_scan, s_scan = jax.lax.associative_scan(
+        combine, (chunk_decay.swapaxes(0, 1), s_c.swapaxes(0, 1))
+    )  # scanned over nc (leading axis)
+    s_inc = s_scan.swapaxes(0, 1)                                # inclusive states
+    # exclusive prefix: state entering each chunk
+    s_prev = jnp.concatenate([jnp.zeros_like(s_inc[:, :1]), s_inc[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", cc, s_prev.astype(cc.dtype),
+                         jnp.exp(cum).astype(cc.dtype), preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p_dim)
+    y = y + xh.astype(y.dtype) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, d_inner).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    from repro.models.shard_ctx import weight_use as _wu
+    out = y @ _wu(p["out_proj"].astype(x.dtype), out_side=True)
+    return out[:, :l_in]
+
+
+def mamba2_apply_naive(p, x, cfg):
+    """Oracle: exact per-step recurrence via lax.scan (for tests)."""
+    d_inner, h, p_dim, n, g = _dims(cfg)
+    bsz, l, _ = x.shape
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xi, b_, c_ = _conv_split(xbc, cfg)
+    xh = xi.reshape(bsz, l, h, p_dim)
+    rep = h // g
+    bh = jnp.repeat(b_.reshape(bsz, l, g, n), rep, axis=2)
+    ch = jnp.repeat(c_.reshape(bsz, l, g, n), rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    def step(state, inp):
+        x_t, b_t, c_t, dt_t = inp  # (B,H,P), (B,H,N), (B,H,N), (B,H)
+        decay = jnp.exp(dt_t * a[None, :])
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhnp", b_t, x_t, dt_t.astype(x_t.dtype))
+        y_t = jnp.einsum("bhn,bhnp->bhp", c_t, state)
+        return state, y_t
+
+    s0 = jnp.zeros((bsz, h, n, p_dim), jnp.float32)
+    xs = (xh.swapaxes(0, 1), bh.swapaxes(0, 1), ch.swapaxes(0, 1), dt.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, s0, xs)
+    y = ys.swapaxes(0, 1)  # (B, L, H, P)
+    y = y + xh.astype(y.dtype) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, d_inner).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------- decode ----
+def mamba2_init_state(cfg, batch: int, dtype):
+    s = cfg.ssm
+    d_inner, h, p_dim, n, g = _dims(cfg)
+    conv_dim = d_inner + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, n, p_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(p, x, cfg, state):
+    """x: (B, 1, D) -> (y (B,1,D), new state). Exact recurrence step."""
+    s = cfg.ssm
+    d_inner, h, p_dim, n, g = _dims(cfg)
+    bsz = x.shape[0]
+    z, xbc, dt = _split_proj(p, x, cfg)
+    # conv over [state_window | new]: take the last output position
+    window = jnp.concatenate([state["conv"], xbc], axis=1)       # (B, W, C)
+    w_ = p["conv_w"].astype(x.dtype)
+    conv_out = (window * w_[None]).sum(1, keepdims=True) + p["conv_b"].astype(x.dtype)
+    xbc1 = jax.nn.silu(conv_out)
+    xi, b_, c_ = _conv_split(xbc1, cfg)
+    x_t = xi.reshape(bsz, h, p_dim)
+    rep = h // g
+    b_t = jnp.repeat(b_.reshape(bsz, g, n), rep, axis=1)
+    c_t = jnp.repeat(c_.reshape(bsz, g, n), rep, axis=1)
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt_t * a[None, :])
+    ssm = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhnp", b_t.astype(jnp.float32), x_t.astype(jnp.float32), dt_t)
+    y = jnp.einsum("bhn,bhnp->bhp", c_t.astype(jnp.float32), ssm)
+    y = y + x_t.astype(y.dtype) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    new_state = {"conv": window[:, 1:], "ssm": ssm}
+    from repro.models.shard_ctx import weight_use as _wu
+    return y @ _wu(p["out_proj"].astype(x.dtype), out_side=True), new_state

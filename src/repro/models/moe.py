@@ -1,0 +1,255 @@
+"""Top-k MoE with capacity-bounded sort dispatch (expert parallelism).
+
+TPU-native dispatch: route -> stable-sort token assignments by expert ->
+position-in-expert rank via segment arithmetic -> capacity drop -> scatter
+into the (G, E, C, D) expert buffer -> batched expert FFN (the MXU-heavy
+grouped matmul) -> unscatter + combine-weight sum. All shapes static; dropped
+tokens follow the standard capacity-factor contract.
+
+GShard group semantics: tokens are split into ``cfg.moe_groups`` routing
+groups (one per data shard on the production mesh, G dim pinned to the data
+axes) with per-group capacity, so the sort/scatter stays LOCAL to each data
+shard; the expert dim is pinned to the tensor axis (EP). The G/E dims are
+explicit in every einsum — an earlier vmap formulation hid them from GSPMD,
+which replicated the expert compute 16x (perf iteration #5b, EXPERIMENTS.md).
+
+Experts shard over the tensor ('model') axis; granite's 40 experts pad to 48
+(`MoEConfig.padded_experts`) with router masking (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.shard_ctx import constrain, expert_weight_use
+
+
+def moe_init(key, cfg):
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.e_padded, m.d_ff_expert
+    ks = jax.random.split(key, 4)
+    if cfg.act == "swiglu":
+        wi = dense_init(ks[0], (e, d, 2 * f), in_axis=1)
+    else:
+        wi = dense_init(ks[0], (e, d, f), in_axis=1)
+    return {
+        "router": dense_init(ks[1], (d, e)),
+        "wi": wi,
+        "wo": dense_init(ks[2], (e, f, d), in_axis=1),
+    }
+
+
+def _router_probs(p, x, cfg):
+    """fp32 router; padded (dead) experts masked to -inf before softmax."""
+    m = cfg.moe
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    if m.e_padded > m.num_experts:
+        dead = jnp.arange(m.e_padded) >= m.num_experts
+        logits = jnp.where(dead[None, :], -1e30, logits)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def moe_apply(p, x, cfg, no_drop: bool = False):
+    """x: (B, S, D) -> (B, S, D). Returns (out, aux) with load-balance loss.
+
+    On a mesh (shard_ctx active) the dispatch runs under shard_map MANUAL
+    over the data axes: each data shard is one GShard routing group doing a
+    plain local 2-D sort/scatter (no cross-shard index ops for GSPMD to
+    mis-partition — the batched-scatter formulation measured an 16x token
+    all-gather, perf iteration #5c), while the expert dim stays GSPMD-auto on
+    the tensor axis (EP). Single-device path: one group, same code.
+
+    no_drop=True sizes capacity to the worst case (decode path: serving must
+    not drop tokens; T is tiny there so the buffer stays small)."""
+    from repro.models import shard_ctx
+
+    ctx = shard_ctx.current()
+    b, s, d = x.shape
+    if ctx is not None:
+        mesh, dp = ctx["mesh"], ctx["dp"]
+        n_dp = 1
+        for a in dp:
+            n_dp *= mesh.shape[a]
+        if n_dp > 1 and b % n_dp == 0:
+            import jax as _jax
+            from jax.sharding import PartitionSpec as _P
+
+            def body(p_local, x_local):
+                out, aux = _moe_one_group(
+                    p_local, x_local.reshape(-1, d), cfg, no_drop, local=True
+                )
+                # aux stays per-shard (out_specs P(dp)); the mean happens
+                # OUTSIDE the manual region — a pmean here differentiates
+                # into a copy-reducer all-reduce that crashes XLA:CPU's
+                # AllReducePromotion pass.
+                return out.reshape(x_local.shape), aux[None]
+
+            fn = _jax.shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(_P(), _P(dp, None, None)),
+                out_specs=(_P(dp, None, None), _P(dp)),
+                axis_names=set(dp),
+                # vma tracking inserts bf16 pvary (copy-reducer all-reduce)
+                # under AD, which crashes XLA:CPU's AllReducePromotion pass;
+                # every out_spec references dp so the check is not needed.
+                check_vma=False,
+            )
+            out, aux = fn(p, x)
+            return out, aux.mean()
+    out, aux = _moe_one_group(p, x.reshape(b * s, d), cfg, no_drop)
+    return out.reshape(b, s, d), aux
+
+
+def _moe_one_group(p, x2d, cfg, no_drop: bool = False, local: bool = False):
+    """One routing group: x2d (T, D) -> ((T, D), aux)."""
+    m = cfg.moe
+    t, d = x2d.shape
+    e = m.e_padded
+    capacity = t * m.top_k if no_drop else max(1, int(m.capacity_factor * t * m.top_k / e))
+    buf_kind = "expert_local" if local else "moe_buf"
+
+    probs = _router_probs(p, x2d, cfg)                   # (T, E) fp32
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- rank within expert: stable sort of (T*K,) assignments ----
+    flat_expert = expert_ids.reshape(t * m.top_k)
+    flat_token = jnp.repeat(jnp.arange(t), m.top_k)
+    flat_gate = gate_vals.reshape(t * m.top_k)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    same = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         (sorted_expert[1:] == sorted_expert[:-1]).astype(jnp.int32)])
+    seg_pos = _segment_positions(same)
+    keep = seg_pos < capacity
+    dest = jnp.where(keep, sorted_expert * capacity + seg_pos, e * capacity)
+
+    # ---- dispatch: local 2-D scatter (last row = trash) ----
+    buf = jnp.zeros((e * capacity + 1, d), x2d.dtype).at[dest].set(x2d[sorted_token])
+    expert_in = buf[: e * capacity].reshape(e, capacity, d)
+    if not local:
+        expert_in = constrain(expert_in, buf_kind)
+
+    # ---- expert FFN: grouped matmul, E pinned to the tensor axis ----
+    # (inside the dp-manual region the weights arrive with their model-axis
+    # sharding intact, so no constraints are needed — and wsc-under-grad in a
+    # manual region triggers an XLA:CPU AllReducePromotion crash)
+    wi = p["wi"].astype(x2d.dtype)
+    wo = p["wo"].astype(x2d.dtype)
+    if not local:
+        wi, wo = expert_weight_use(wi), expert_weight_use(wo)
+    h = jnp.einsum("ecd,edf->ecf", expert_in, wi)
+    if not local:
+        h = constrain(h, buf_kind)
+    if cfg.act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(h)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, wo)
+    if not local:
+        expert_out = constrain(expert_out, buf_kind)
+
+    # ---- combine: gather back + weight + scatter-add over duplicates ----
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(e * capacity, d), jnp.zeros((1, d), x2d.dtype)])
+    gathered = flat_out[dest] * sorted_gate[:, None].astype(x2d.dtype)
+    out = jnp.zeros((t, d), x2d.dtype).at[sorted_token].add(gathered)
+
+    # load-balance aux (Switch-style)
+    frac_probs = probs.mean(0)
+    frac_tokens = jnp.zeros(e, jnp.float32).at[flat_expert].add(1.0) / (t * m.top_k)
+    aux = m.num_experts * jnp.sum(frac_probs * frac_tokens)
+    return out, aux
+
+
+def _moe_apply_grouped_reference(p, x, cfg, no_drop: bool = False):
+    """Retired all-GSPMD grouped formulation (kept as documentation of perf
+    iteration #5b/5c — the batched scatter forced token all-gathers)."""
+    m = cfg.moe
+    g = max(1, getattr(cfg, "moe_groups", 1))
+    b, s, d = x.shape
+    assert b % g == 0, f"batch {b} % moe_groups {g} != 0"
+    t = (b // g) * s                                     # tokens per group
+    e = m.e_padded
+    capacity = t * m.top_k if no_drop else max(1, int(m.capacity_factor * t * m.top_k / e))
+
+    xg = constrain(x.reshape(g, t, d), "hidden")         # (G, T, D), G on dp axes
+
+    probs = _router_probs(p, xg, cfg)                    # (G, T, E) fp32
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- rank within expert: per-group stable sort of (T*K,) assignments ----
+    flat_expert = expert_ids.reshape(g, t * m.top_k)
+    flat_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(t), m.top_k)[None], (g, t * m.top_k))
+    flat_gate = gate_vals.reshape(g, t * m.top_k)
+    order = jnp.argsort(flat_expert, axis=-1, stable=True)
+    sorted_expert = jnp.take_along_axis(flat_expert, order, axis=-1)
+    sorted_token = jnp.take_along_axis(flat_token, order, axis=-1)
+    sorted_gate = jnp.take_along_axis(flat_gate, order, axis=-1)
+    same = jnp.concatenate(
+        [jnp.zeros((g, 1), jnp.int32),
+         (sorted_expert[:, 1:] == sorted_expert[:, :-1]).astype(jnp.int32)], axis=-1)
+    seg_pos = _segment_positions(same)
+    keep = seg_pos < capacity
+    dest = jnp.where(keep, sorted_expert * capacity + seg_pos, e * capacity)
+
+    # ---- dispatch: per-group scatter into (G, E*C+1, D) (last row = trash) ----
+    g_idx = jnp.arange(g)[:, None]
+    x_sorted = constrain(jnp.take_along_axis(xg, sorted_token[..., None], axis=1), "hidden")
+    buf = jnp.zeros((g, e * capacity + 1, d), x.dtype).at[g_idx, dest].set(x_sorted)
+    buf = constrain(buf, "hidden")
+    expert_in = constrain(buf[:, : e * capacity].reshape(g, e, capacity, d), "moe_buf")
+
+    # ---- expert FFN: grouped matmul, E pinned to the tensor axis ----
+    wi = expert_weight_use(p["wi"].astype(x.dtype))
+    wo = expert_weight_use(p["wo"].astype(x.dtype))
+    h = constrain(jnp.einsum("gecd,edf->gecf", expert_in, wi), "moe_buf")
+    if cfg.act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(h)
+    expert_out = constrain(jnp.einsum("gecf,efd->gecd", h, wo), "moe_buf")
+
+    # ---- combine: gather back + weight + scatter-add over duplicates ----
+    flat_out = constrain(jnp.concatenate(
+        [expert_out.reshape(g, e * capacity, d), jnp.zeros((g, 1, d), x.dtype)], axis=1),
+        "hidden")
+    gathered = constrain(jnp.take_along_axis(flat_out, dest[..., None], axis=1), "hidden")
+    gathered = gathered * sorted_gate[..., None].astype(x.dtype)
+    out = jnp.zeros((g, t, d), x.dtype).at[g_idx, sorted_token].add(gathered)
+    out = constrain(out, "hidden")
+
+    # load-balance aux (Switch-style): E * mean over groups of Σ f_i·p_i
+    frac_probs = probs.mean(1)                                        # (G, E)
+    ones = jnp.ones_like(flat_expert, jnp.float32)
+    frac_tokens = jnp.zeros((g, e), jnp.float32).at[g_idx, flat_expert].add(ones)
+    frac_tokens = frac_tokens / (t * m.top_k)
+    aux = m.num_experts * jnp.sum(frac_probs * frac_tokens, axis=-1).mean()
+    return out.reshape(b, s, d), aux
+
+
+def _segment_positions(same_as_prev):
+    """same_as_prev[..., i] in {0,1}: 1 if element i continues the previous
+    run. Returns the 0-based position of each element within its run — a
+    segmented counter via (reset ? 0 : +1) associative scan over the last
+    axis."""
+
+    def combine(a, b):
+        cnt_a, brk_a = a
+        cnt_b, brk_b = b
+        return jnp.where(brk_b, cnt_b, cnt_a + cnt_b), brk_a | brk_b
+
+    cnt = same_as_prev.astype(jnp.int32)
+    brk = same_as_prev == 0
+    pos, _ = jax.lax.associative_scan(combine, (cnt, brk), axis=-1)
+    return pos

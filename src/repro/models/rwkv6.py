@@ -1,0 +1,249 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): time-mix with data-dependent
+per-channel decay + channel-mix. Attention-free; state is O(H·K·V) per layer.
+
+Projections/decays for the whole sequence are computed in parallel (MXU);
+only the WKV recurrence scans over time. Decode is the exact one-step update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def _dims(cfg):
+    dh = cfg.rwkv.head_dim
+    h = cfg.d_model // dh
+    return h, dh
+
+
+def rwkv6_init(key, cfg):
+    d = cfg.d_model
+    r = cfg.rwkv
+    h, dh = _dims(cfg)
+    ks = jax.random.split(key, 12)
+    # decay bias: spread across channels like the reference init
+    decay_speed = -6.0 + 5.0 * (jnp.arange(d) / max(1, d - 1)) ** 0.9
+    return {
+        "tm": {
+            # ddlerp: 5 mixing directions (w,k,v,r,g), base mu + low-rank adapter
+            "mu": jax.random.uniform(ks[0], (5, d), jnp.float32, 0.0, 1.0),
+            "mix_a": dense_init(ks[1], (d, 5 * r.lora_dim)),
+            "mix_b": jax.random.normal(ks[2], (5, r.lora_dim, d), jnp.float32) * 0.01,
+            "w0": decay_speed,                                  # (d,) decay base
+            "w_a": dense_init(ks[3], (d, r.lora_dim)),
+            "w_b": jax.random.normal(ks[4], (r.lora_dim, d), jnp.float32) * 0.01,
+            "u": jax.random.normal(ks[5], (d,), jnp.float32) * 0.1,  # bonus
+            "wr": dense_init(ks[6], (d, d)),
+            "wk": dense_init(ks[7], (d, d)),
+            "wv": dense_init(ks[8], (d, d)),
+            "wg": dense_init(ks[9], (d, d)),
+            "wo": dense_init(ks[10], (d, d)),
+            "ln_scale": jnp.ones((d,), jnp.float32),            # per-head groupnorm
+            "ln_bias": jnp.zeros((d,), jnp.float32),
+        },
+        "cm": {
+            "mu_k": jax.random.uniform(ks[11], (d,), jnp.float32, 0.0, 1.0),
+            "mu_r": jnp.full((d,), 0.5, jnp.float32),
+            "wk": dense_init(jax.random.fold_in(key, 1), (d, r.d_ff)),
+            "wv": dense_init(jax.random.fold_in(key, 2), (r.d_ff, d)),
+            "wr": dense_init(jax.random.fold_in(key, 3), (d, d)),
+        },
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift interpolation for the 5 branches."""
+    d = x.shape[-1]
+    delta = (x_prev - x).astype(x.dtype)
+    base = x + delta * p["mu"][:, None, None, :].astype(x.dtype)  # (5, B, S, D) lazy: build per branch
+    lora = jnp.tanh(x @ p["mix_a"].astype(x.dtype))
+    lora = lora.reshape(*x.shape[:-1], 5, -1)                     # (B, S, 5, R)
+    adj = jnp.einsum("bsfr,frd->fbsd", lora, p["mix_b"].astype(x.dtype))
+    return base + delta[None] * adj                               # (5, B, S, D)
+
+
+def _wkv_scan(r, k, v, w, u, h, dh):
+    """Oracle: exact per-timestep RWKV-6 recurrence (used by tests and as the
+    chunked form's reference).
+
+    r,k,v: (B, S, H, Dh); w: per-step decay in (0,1), same shape as k.
+    y_t = r_t · (S_{t-1} + u ⊙ k_t v_tᵀ);  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ.
+    """
+    b, s, _, _ = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, Dh)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[None, :, :, None] * kv)
+        state = state * w_t[..., None] + kv
+        return state, y
+
+    from repro.models.layers import vzero
+
+    s0 = jnp.zeros((b, h, dh, dh), jnp.float32) + vzero(r)
+    xs = tuple(a.swapaxes(0, 1).astype(jnp.float32) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), state  # (B, S, H, Dh), (B, H, K, V)
+
+
+def _wkv_chunked(r, k, v, lw, u, chunk: int = 32):
+    """Chunk-parallel WKV (perf iteration #4, EXPERIMENTS.md §Perf).
+
+    The per-timestep scan does O(T) sequential state read/writes and the scan
+    bwd stacks per-step residuals — at 4k train that measured ~2e15 HBM
+    B/dev. The chunked form runs the recurrence at chunk granularity
+    (T/Q iterations) with matmul-form intra-chunk mixing, so residuals and
+    state traffic shrink by Q× and the inner compute lands on the MXU.
+
+    r,k,v: (B, S, H, K) fp32; lw = log(decay) ≤ 0 per step, same shape;
+    u: (H, K) bonus. Every exponent formed here is ≤ 0 (joint (t,s,k)
+    differences), so no overflow — the factored e^{+c}·e^{-c} form is never
+    materialised. Returns (y (B,S,H,V), final state (B,H,K,V)).
+    """
+    from repro.models.layers import vzero
+
+    b, s, h, kdim = r.shape
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        # inert tail: zero r (no output), zero k (no state write), lw=0 (no decay)
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // q
+
+    def to_chunks(a):  # (B, S, H, K) -> (nc, B, H, Q, K)
+        return a.reshape(b, nc, q, h, -1).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+    c_inc = jnp.cumsum(lwc, axis=3)          # inclusive Σ_{j<=t} lw  (nc,B,H,Q,K)
+    c_exc = c_inc - lwc                      # exclusive Σ_{j<t}
+    causal = jnp.tril(jnp.ones((q, q), bool), k=-1)  # strict s < t
+
+    def body(state, inp):
+        r_, k_, v_, ci, ce = inp             # (B, H, Q, K/V)
+        # intra-chunk: A[t,s] = Σ_k r[t,k] k[s,k] e^{ce[t,k]-ci[s,k]}, s<t
+        gap = ce[:, :, :, None, :] - ci[:, :, None, :, :]      # (B,H,Qt,Qs,K) ≤ 0
+        decay = jnp.where(causal[None, None, :, :, None], jnp.exp(gap), 0.0)
+        a = jnp.einsum("bhtk,bhsk,bhtsk->bhts", r_, k_, decay)
+        a_diag = jnp.einsum("bhtk,bhtk->bht", r_ * u[None, :, None, :], k_)
+        a = a + a_diag[..., None] * jnp.eye(q)[None, None]
+        y = jnp.einsum("bhts,bhsv->bhtv", a, v_)
+        # inter-chunk: carry-in state decayed to each position
+        y = y + jnp.einsum("bhtk,bhkv->bhtv", r_ * jnp.exp(ce), state)
+        # state handoff: S' = diag(e^{c_last}) S + Σ_s e^{c_last - ci[s]} k_s ⊗ v_s
+        c_last = ci[:, :, -1, :]                               # (B,H,K)
+        w_k = jnp.exp(c_last[:, :, None, :] - ci)              # ≤ 1
+        state = state * jnp.exp(c_last)[..., None] + jnp.einsum(
+            "bhsk,bhsv->bhkv", k_ * w_k, v_)
+        return state, y
+
+    body = jax.checkpoint(body)
+    s0 = jnp.zeros((b, h, kdim, v.shape[-1]), jnp.float32) + vzero(rc)
+    state, ys = jax.lax.scan(body, s0, (rc, kc, vc, c_inc, c_exc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s + pad, h, -1)
+    return y[:, :s], state
+
+
+def _group_norm(p, y, h, dh, eps=64e-5):
+    """Per-head LayerNorm (RWKV's GroupNorm over heads)."""
+    b, s, _, _ = y.shape
+    mean = y.mean(-1, keepdims=True)
+    var = ((y - mean) ** 2).mean(-1, keepdims=True)
+    yn = (y - mean) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(b, s, h * dh)
+    return yn * p["ln_scale"] + p["ln_bias"]
+
+
+def timemix_apply(tm, x, x_prev, cfg, return_state: bool = False):
+    h, dh = _dims(cfg)
+    b, s, d = x.shape
+    mixed = _ddlerp(tm, x, x_prev)                   # (5, B, S, D) order: w,k,v,r,g
+    xw, xk, xv, xr, xg = mixed[0], mixed[1], mixed[2], mixed[3], mixed[4]
+
+    # data-dependent decay: w = exp(-exp(w0 + lora(xw)))  in (0,1)
+    w_log = tm["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ tm["w_a"].astype(x.dtype)) @ tm["w_b"].astype(x.dtype)
+    ).astype(jnp.float32)
+    lw = -jnp.exp(w_log)                             # log decay <= 0, (B, S, D)
+
+    from repro.models.shard_ctx import weight_use as _wu
+    r = (xr @ _wu(tm["wr"].astype(x.dtype))).reshape(b, s, h, dh).astype(jnp.float32)
+    k = (xk @ _wu(tm["wk"].astype(x.dtype))).reshape(b, s, h, dh).astype(jnp.float32)
+    v = (xv @ _wu(tm["wv"].astype(x.dtype))).reshape(b, s, h, dh).astype(jnp.float32)
+    g = xg @ _wu(tm["wg"].astype(x.dtype))
+    u = tm["u"].astype(jnp.float32).reshape(h, dh)
+
+    chunk = getattr(cfg.rwkv, "chunk", 32)
+    if chunk > 1:
+        y, state = _wkv_chunked(r, k, v, lw.reshape(b, s, h, dh), u, chunk=chunk)
+    else:
+        y, state = _wkv_scan(r, k, v, jnp.exp(lw).reshape(b, s, h, dh), u, h, dh)
+    y = _group_norm(tm, y, h, dh).astype(x.dtype)
+    out = (y * jax.nn.silu(g)) @ _wu(tm["wo"].astype(x.dtype), out_side=True)
+    return (out, state) if return_state else out
+
+
+def channelmix_apply(cm, x, x_prev):
+    from repro.models.shard_ctx import weight_use as _wu
+
+    xk = x + (x_prev - x) * cm["mu_k"].astype(x.dtype)
+    xr = x + (x_prev - x) * cm["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ _wu(cm["wk"].astype(x.dtype))))
+    return jax.nn.sigmoid(xr @ _wu(cm["wr"].astype(x.dtype))) * (k @ _wu(cm["wv"].astype(x.dtype), out_side=True))
+
+
+def shift_tokens(x, seed_row=None):
+    """Token shift: row t sees row t-1 (first row sees zeros / carried state)."""
+    first = jnp.zeros_like(x[:, :1]) if seed_row is None else seed_row[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+# ----------------------------------------------------------------- decode ----
+def rwkv6_init_state(cfg, batch: int, dtype):
+    h, dh = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "tm_shift": jnp.zeros((batch, d), dtype),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, dh, dh), jnp.float32),
+    }
+
+
+def timemix_decode(tm, x, state_shift, wkv_state, cfg):
+    """x: (B, 1, D). Returns (y, new_shift, new_wkv)."""
+    from repro.models.shard_ctx import weight_use as _wu
+
+    h, dh = _dims(cfg)
+    b, _, d = x.shape
+    x_prev = state_shift[:, None]
+    mixed = _ddlerp(tm, x, x_prev)
+    xw, xk, xv, xr, xg = (m[:, 0] for m in mixed)    # (B, D)
+
+    w_log = tm["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ tm["w_a"].astype(x.dtype)) @ tm["w_b"].astype(x.dtype)
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, h, dh)
+
+    r = (xr @ tm["wr"].astype(x.dtype)).reshape(b, h, dh).astype(jnp.float32)
+    k = (xk @ tm["wk"].astype(x.dtype)).reshape(b, h, dh).astype(jnp.float32)
+    v = (xv @ tm["wv"].astype(x.dtype)).reshape(b, h, dh).astype(jnp.float32)
+    g = xg @ _wu(tm["wg"].astype(x.dtype))
+    u = tm["u"].astype(jnp.float32).reshape(h, dh)
+
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, wkv_state + u[None, :, :, None] * kv)[:, None]  # (B,1,H,Dh)
+    new_wkv = wkv_state * w[..., None] + kv
+    y = _group_norm(tm, y.reshape(b, 1, h, dh), h, dh).astype(x.dtype)
+    out = (y * jax.nn.silu(g[:, None])) @ tm["wo"].astype(x.dtype)
+    return out, x[:, 0], new_wkv
+
+
+def channelmix_decode(cm, x, state_shift):
+    x_prev = state_shift[:, None]
+    out = channelmix_apply(cm, x, x_prev)
+    return out, x[:, 0]

@@ -1,0 +1,102 @@
+"""Trace-time activation-sharding context.
+
+GSPMD propagates weight shardings well, but activation sharding at
+ambiguity points (embedding gather output, per-block outputs, logits) can
+resolve to full replication — at qwen-110B scale that is a ~1.5 TB/device
+FFN hidden (measured; EXPERIMENTS.md §Perf iteration #3). The fix, as in
+MaxText, is explicit ``with_sharding_constraint`` on every major activation.
+
+Drivers (dryrun / trainer / server) install the mesh + logical axes here
+before tracing; model code calls :func:`constrain` with a logical kind.
+Without a context the calls are no-ops (single-device tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, dp_axes=("data",), tensor_axis="model"):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = {"mesh": mesh, "dp": tuple(dp_axes), "tensor": tensor_axis}
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def _spec_for(kind: str, ndim: int, ctx) -> P:
+    dp, tensor = ctx["dp"], ctx["tensor"]
+    if kind == "hidden":        # (B, S, D) or (B, 1, D)
+        return P(dp, *([None] * (ndim - 1)))
+    if kind == "logits":        # (B, [S,] V): vocab over tensor axis
+        return P(dp, *([None] * (ndim - 2)), tensor)
+    if kind == "heads":         # (B, S, H, Dh): heads over tensor axis
+        return P(dp, None, tensor, *([None] * (ndim - 3)))
+    if kind == "w_in":          # (..., D_in, D_out): gather fsdp, keep TP out
+        return P(*([None] * (ndim - 1)), tensor)
+    if kind == "w_out":         # (..., D_contract(TP), D_out): gather fsdp
+        return P(*([None] * (ndim - 2)), tensor, None)
+    if kind == "expert_w":      # (E, D, F): experts stay sharded, D/F gathered
+        return P(tensor, *([None] * (ndim - 1)))
+    if kind == "moe_buf":       # (G, E, C, D): groups on dp, experts on tensor
+        return P(dp, tensor, *([None] * (ndim - 2)))
+    if kind == "expert_local":  # (E, C, D) inside a dp-manual region: EP only
+        return P(tensor, *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def current():
+    return getattr(_TLS, "ctx", None)
+
+
+def constrain(x, kind: str):
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    # inside a shard_map manual region, constraints must be expressed on the
+    # current abstract mesh (manual axes marked); outside it this is a no-op
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty and any(
+            t == jax.sharding.AxisType.Manual for t in getattr(am, "axis_types", ())
+        ):
+            mesh = am
+    except Exception:
+        pass
+    spec = _spec_for(kind, x.ndim, ctx)
+    # divisibility guards: drop any entry whose dim doesn't divide its axes
+    sizes = {a: mesh.shape[a] for a in mesh.axis_names}
+    fixed = []
+    for dim, entry in zip(x.shape, spec):
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        fixed.append(entry if dim % total == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+
+def weight_use(w, out_side: bool = False):
+    """Gather-at-use for FSDP-sharded weights (ZeRO-3 semantics): without
+    this, GSPMD may instead all-reduce the (much larger) activations over the
+    fsdp axis — measured 1.1e12 B/dev on dbrx prefill (perf iteration #5)."""
+    if w.ndim < 2:
+        return w
+    return constrain(w, "w_out" if out_side else "w_in")
+
+
+def expert_weight_use(w):
+    return constrain(w, "expert_w")

@@ -1,0 +1,449 @@
+"""Unified decoder LM covering all assigned architecture families.
+
+Families (ModelConfig.block_type):
+  attn         — dense / MoE transformer (GQA or MLA attention)
+  mamba2       — SSD backbone (attention-free)
+  rwkv6        — RWKV-6 time-mix / channel-mix (attention-free)
+  zamba_hybrid — Mamba2 backbone + ONE weight-shared attn+FFN block applied
+                 every `share_every` layers (Zamba2 pattern)
+
+Layers are stacked with a leading L dim (vmap'd init) and driven by
+``lax.scan`` so HLO size is O(1) in depth; ``cfg.remat`` wraps the block body
+in ``jax.checkpoint``. Frontends: 'tokens', 'frames' (audio stub: precomputed
+frame embeddings), 'vlm' (stub patch embeddings prepended to token embeds).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rk
+from repro.models.config import ModelConfig
+from repro.models.shard_ctx import constrain
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    ffn_init,
+    ffn_apply,
+    norm_apply,
+    norm_init,
+    vzero,
+)
+
+
+def _cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ================================================================ blocks ====
+def _dense_block_init(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": norm_init(cfg.norm, cfg.d_model), "ln2": norm_init(cfg.norm, cfg.d_model)}
+    p["attn"] = attn.mla_init(k1, cfg) if cfg.attn_type == "mla" else attn.gqa_init(k1, cfg)
+    p["mlp"] = moe_mod.moe_init(k3, cfg) if cfg.moe else ffn_init(k2, cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _dense_block_apply(p, x, cfg: ModelConfig):
+    h = norm_apply(cfg.norm, p["ln1"], x)
+    h = attn.mla_apply(p["attn"], h, cfg) if cfg.attn_type == "mla" else attn.gqa_apply(p["attn"], h, cfg)
+    x = x + h
+    h = norm_apply(cfg.norm, p["ln2"], x)
+    if cfg.moe:
+        out, aux = moe_mod.moe_apply(p["mlp"], h, cfg)
+    else:
+        out, aux = ffn_apply(p["mlp"], h, cfg.act), jnp.float32(0)
+    return x + out, aux
+
+
+def _dense_block_prefill(p, x, cfg, cache_len):
+    h = norm_apply(cfg.norm, p["ln1"], x)
+    if cfg.attn_type == "mla":
+        h, cache = attn.mla_prefill(p["attn"], h, cfg, cache_len)
+    else:
+        h, cache = attn.gqa_prefill(p["attn"], h, cfg, cache_len)
+    x = x + h
+    h = norm_apply(cfg.norm, p["ln2"], x)
+    if cfg.moe:
+        out, _ = moe_mod.moe_apply(p["mlp"], h, cfg)
+    else:
+        out = ffn_apply(p["mlp"], h, cfg.act)
+    return x + out, cache
+
+
+def _dense_block_decode(p, x, cfg, cache, pos):
+    h = norm_apply(cfg.norm, p["ln1"], x)
+    if cfg.attn_type == "mla":
+        h, cache = attn.mla_decode(p["attn"], h, cfg, cache, pos)
+    else:
+        h, cache = attn.gqa_decode(p["attn"], h, cfg, cache, pos)
+    x = x + h
+    h = norm_apply(cfg.norm, p["ln2"], x)
+    if cfg.moe:
+        out, _ = moe_mod.moe_apply(p["mlp"], h, cfg, no_drop=True)  # serving never drops
+    else:
+        out = ffn_apply(p["mlp"], h, cfg.act)
+    return x + out, cache
+
+
+def _mamba_block_init(key, cfg):
+    return {"ln": norm_init(cfg.norm, cfg.d_model), "mix": m2.mamba2_init(key, cfg)}
+
+
+def _mamba_block_apply(p, x, cfg):
+    return x + m2.mamba2_apply(p["mix"], norm_apply(cfg.norm, p["ln"], x), cfg), jnp.float32(0)
+
+
+def _mamba_block_decode(p, x, cfg, state):
+    y, state = m2.mamba2_decode(p["mix"], norm_apply(cfg.norm, p["ln"], x), cfg, state)
+    return x + y, state
+
+
+def _rwkv_block_init(key, cfg):
+    p = rk.rwkv6_init(key, cfg)
+    p["ln1"] = norm_init("layernorm", cfg.d_model)
+    p["ln2"] = norm_init("layernorm", cfg.d_model)
+    return p
+
+
+def _rwkv_block_apply(p, x, cfg):
+    h = norm_apply("layernorm", p["ln1"], x)
+    x = x + rk.timemix_apply(p["tm"], h, rk.shift_tokens(h), cfg)
+    h = norm_apply("layernorm", p["ln2"], x)
+    x = x + rk.channelmix_apply(p["cm"], h, rk.shift_tokens(h))
+    return x, jnp.float32(0)
+
+
+def _rwkv_block_decode(p, x, cfg, state):
+    h = norm_apply("layernorm", p["ln1"], x)
+    y, tm_shift, wkv = rk.timemix_decode(p["tm"], h, state["tm_shift"], state["wkv"], cfg)
+    x = x + y
+    h = norm_apply("layernorm", p["ln2"], x)
+    y, cm_shift = rk.channelmix_decode(p["cm"], h, state["cm_shift"])
+    x = x + y
+    return x, {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}
+
+
+# ============================================================== assembly ====
+def _stacked_init(key, n, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_model(key, cfg: ModelConfig):
+    kb, ke, kh, ks = jax.random.split(key, 4)
+    params = {"final_ln": norm_init(cfg.norm, cfg.d_model)}
+    if cfg.frontend in ("tokens", "vlm"):
+        params["embed"] = embed_init(ke, cfg.vocab_size, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(kh, (cfg.d_model, cfg.vocab_size))
+
+    if cfg.block_type == "attn":
+        params["blocks"] = _stacked_init(kb, cfg.num_layers, lambda k: _dense_block_init(k, cfg))
+    elif cfg.block_type == "mamba2":
+        params["blocks"] = _stacked_init(kb, cfg.num_layers, lambda k: _mamba_block_init(k, cfg))
+    elif cfg.block_type == "rwkv6":
+        params["blocks"] = _stacked_init(kb, cfg.num_layers, lambda k: _rwkv_block_init(k, cfg))
+    elif cfg.block_type == "zamba_hybrid":
+        assert cfg.num_layers % cfg.share_every == 0
+        groups = cfg.num_layers // cfg.share_every
+        flat = _stacked_init(kb, cfg.num_layers, lambda k: _mamba_block_init(k, cfg))
+        params["blocks"] = jax.tree.map(
+            lambda a: a.reshape(groups, cfg.share_every, *a.shape[1:]), flat
+        )
+        params["shared"] = _dense_block_init(ks, cfg)   # ONE weight-shared block
+    else:
+        raise ValueError(cfg.block_type)
+    return params
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _run_stack(stacked, x, body, cfg):
+    body = _maybe_remat(body, cfg)
+
+    def step(carry, p):
+        h, aux = carry
+        y, a = body(p, h)
+        return (constrain(y, "hidden"), aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0) + vzero(x)), stacked)
+    return x, aux
+
+
+def _embed_input(params, cfg, batch):
+    dt = _cdt(cfg)
+    if cfg.frontend == "tokens":
+        x = params["embed"]["table"].astype(dt)[batch["tokens"]]
+    elif cfg.frontend == "frames":
+        x = batch["frames"].astype(dt)
+    elif cfg.frontend == "vlm":
+        tok = params["embed"]["table"].astype(dt)[batch["tokens"]]
+        x = jnp.concatenate([batch["patches"].astype(dt), tok], axis=1)
+    else:
+        raise ValueError(cfg.frontend)
+    return constrain(x, "hidden")
+
+
+def _head(params, cfg, x):
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(x.dtype).T
+    else:
+        w = params["head"].astype(x.dtype)
+    return (x @ w).astype(jnp.float32)
+
+
+def forward_hidden(params, cfg: ModelConfig, batch):
+    """Final-norm hidden states (B, S_total, D); aux (MoE balance) 2nd."""
+    x = _embed_input(params, cfg, batch)
+
+    if cfg.block_type == "attn":
+        x, aux = _run_stack(params["blocks"], x, lambda p, h: _dense_block_apply(p, h, cfg), cfg)
+    elif cfg.block_type == "mamba2":
+        x, aux = _run_stack(params["blocks"], x, lambda p, h: _mamba_block_apply(p, h, cfg), cfg)
+    elif cfg.block_type == "rwkv6":
+        x, aux = _run_stack(params["blocks"], x, lambda p, h: _rwkv_block_apply(p, h, cfg), cfg)
+    elif cfg.block_type == "zamba_hybrid":
+        shared = params["shared"]
+
+        def group_body(p, h):
+            h, a = _run_stack(p, h, lambda q, hh: _mamba_block_apply(q, hh, cfg), cfg)
+            h, a2 = _dense_block_apply(shared, h, cfg)
+            return h, a + a2
+
+        x, aux = _run_stack(params["blocks"], x, group_body, cfg)
+    else:
+        raise ValueError(cfg.block_type)
+
+    x = norm_apply(cfg.norm, params["final_ln"], x)
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, batch):
+    """Full-sequence logits (B, S_total, V); aux (MoE balance) as 2nd output."""
+    x, aux = forward_hidden(params, cfg, batch)
+    return _head(params, cfg, x), aux
+
+
+def _ce_sum(params, cfg, x, labels):
+    """Σ cross-entropy over a (B, S, D) slab (fp32 logits)."""
+    logits = constrain(_head(params, cfg, x), "logits")
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - ll).sum()
+
+
+def loss_fn(params, cfg: ModelConfig, batch, aux_weight: float = 0.01):
+    """Mean next-token cross entropy (+ MoE load-balance aux).
+
+    With cfg.loss_chunk > 0 and S divisible, the vocab projection + CE runs
+    chunked over the sequence (scan + remat), so the (B, S, V) fp32 logits
+    tensor is never materialised — at 150k vocab × 1M tokens that is the
+    difference between ~300 MB and ~2.5 TB of per-device temps
+    (perf iteration #2, EXPERIMENTS.md §Perf).
+    """
+    x, aux = forward_hidden(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.frontend == "vlm":  # loss only over the text segment (last S_text)
+        x = x[:, -labels.shape[1] :]
+    b, s, _ = x.shape
+    chunk = cfg.loss_chunk
+    if chunk and s % chunk == 0 and s > chunk:
+        xc = x.reshape(b, s // chunk, chunk, -1).swapaxes(0, 1)
+        lc = labels.reshape(b, s // chunk, chunk).swapaxes(0, 1)
+        body = jax.checkpoint(lambda c, xs: (c + _ce_sum(params, cfg, xs[0], xs[1]), None))
+        total, _ = jax.lax.scan(body, jnp.float32(0) + vzero(x), (xc, lc))
+        loss = total / (b * s)
+    else:
+        loss = _ce_sum(params, cfg, x, labels) / (b * s)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# =============================================================== serving ====
+def prefill_step(params, cfg: ModelConfig, batch, cache_len: int):
+    """Process the prompt; return (last-position logits (B, V), decode cache)."""
+    x = _embed_input(params, cfg, batch)
+
+    if cfg.block_type == "attn":
+        body = _maybe_remat(lambda p, h: _dense_block_prefill(p, h, cfg, cache_len), cfg)
+
+        def step(h, p):
+            y, cache = body(p, h)
+            return constrain(y, "hidden"), cache
+
+        x, caches = jax.lax.scan(step, x, params["blocks"])
+    elif cfg.block_type in ("mamba2", "rwkv6"):
+        x, caches = _recurrent_prefill(params["blocks"], x, cfg)
+    elif cfg.block_type == "zamba_hybrid":
+        x, caches = _zamba_prefill(params, x, cfg, cache_len)
+    else:
+        raise ValueError(cfg.block_type)
+
+    x = norm_apply(cfg.norm, params["final_ln"], x[:, -1:])
+    return _head(params, cfg, x)[:, 0], caches
+
+
+def _recurrent_prefill(stacked, x, cfg):
+    """SSM/RWKV prefill: run the parallel form AND extract the final state by
+    replaying the last position through the decode step (cheap, exact)."""
+    if cfg.block_type == "mamba2":
+        body = _maybe_remat(lambda p, h: _mamba_state_prefill(p, h, cfg), cfg)
+    else:
+        body = _maybe_remat(lambda p, h: _rwkv_state_prefill(p, h, cfg), cfg)
+
+    def step(h, p):
+        y, state = body(p, h)
+        return y, state
+
+    return jax.lax.scan(step, x, stacked)
+
+
+def _mamba_state_prefill(p, x, cfg):
+    """Forward + final SSD state. Uses the naive-step identity: the state after
+    L steps equals a decode pass over the (already computed) last conv window —
+    we recompute the recurrence on the final chunk only."""
+    y = x + m2.mamba2_apply(p["mix"], norm_apply(cfg.norm, p["ln"], x), cfg)
+    state = _mamba_final_state(p["mix"], norm_apply(cfg.norm, p["ln"], x), cfg)
+    return y, state
+
+
+def _mamba_final_state(p, xin, cfg):
+    s = cfg.ssm
+    d_inner, h, p_dim, n, g = m2._dims(cfg)
+    bsz, l, _ = xin.shape
+    z, xbc, dt = m2._split_proj(p, xin, cfg)
+    conv_tail = xbc[:, -(s.conv_width - 1) :, :]
+    xbc = jax.nn.silu(m2._causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xi, b_, c_ = m2._conv_split(xbc, cfg)
+    xh = xi.reshape(bsz, l, h, p_dim)
+    rep = h // g
+    bh = jnp.repeat(b_.reshape(bsz, l, g, n), rep, axis=2)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    ld = dtf * a[None, None, :]
+    cum = jnp.cumsum(ld, axis=1)                       # (B, L, H)
+    w_k = jnp.exp(cum[:, -1:, :] - cum) * dtf          # decay from k to end
+    ssm = jnp.einsum("blhn,blhp,blh->bhnp", bh, xh, w_k.astype(xh.dtype),
+                     preferred_element_type=jnp.float32)
+    return {"conv": conv_tail, "ssm": ssm}
+
+
+def _rwkv_state_prefill(p, x, cfg):
+    h1 = norm_apply("layernorm", p["ln1"], x)
+    out, wkv = rk.timemix_apply(p["tm"], h1, rk.shift_tokens(h1), cfg, return_state=True)
+    x1 = x + out
+    h2 = norm_apply("layernorm", p["ln2"], x1)
+    x2 = x1 + rk.channelmix_apply(p["cm"], h2, rk.shift_tokens(h2))
+    state = {"tm_shift": h1[:, -1], "cm_shift": h2[:, -1], "wkv": wkv}
+    return x2, state
+
+
+def _zamba_prefill(params, x, cfg, cache_len):
+    shared = params["shared"]
+    body_m = _maybe_remat(lambda p, h: _mamba_state_prefill(p, h, cfg), cfg)
+    body_s = _maybe_remat(lambda h: _dense_block_prefill(shared, h, cfg, cache_len), cfg)
+
+    def group(h, p):
+        h, mstates = jax.lax.scan(lambda hh, q: body_m(q, hh), h, p)
+        h, kv = body_s(h)
+        return h, {"mamba": mstates, "shared_kv": kv}
+
+    return jax.lax.scan(group, x, params["blocks"])
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """Zero caches shaped for decode_step (pre-allocated to cache_len)."""
+    dt = _cdt(cfg)
+    l = cfg.num_layers
+
+    def stack(tree, n):
+        return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype), tree)
+
+    if cfg.block_type == "attn":
+        if cfg.attn_type == "mla":
+            m = cfg.mla
+            one = {
+                "c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_dim), dt),
+            }
+        else:
+            one = {
+                "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dt),
+            }
+        return stack(one, l)
+    if cfg.block_type == "mamba2":
+        return stack(m2.mamba2_init_state(cfg, batch, dt), l)
+    if cfg.block_type == "rwkv6":
+        return stack(rk.rwkv6_init_state(cfg, batch, dt), l)
+    if cfg.block_type == "zamba_hybrid":
+        groups = cfg.num_layers // cfg.share_every
+        mamba = stack(stack(m2.mamba2_init_state(cfg, batch, dt), cfg.share_every), groups)
+        kv = stack(
+            {
+                "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dt),
+            },
+            groups,
+        )
+        return {"mamba": mamba, "shared_kv": kv}
+    raise ValueError(cfg.block_type)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One token for every sequence. tokens: (B, 1) int32 (or frames (B,1,D));
+    pos: (B,) current write index. Returns (logits (B, V), new cache)."""
+    dt = _cdt(cfg)
+    if cfg.frontend == "frames":
+        x = tokens.astype(dt) if tokens.ndim == 3 else None
+        assert x is not None, "frames frontend decodes from frame embeddings"
+    else:
+        x = params["embed"]["table"].astype(dt)[tokens]
+
+    if cfg.block_type == "attn":
+        def step(h, inp):
+            p, c = inp
+            y, c2 = _dense_block_decode(p, h, cfg, c, pos)
+            return y, c2
+
+        x, new_cache = jax.lax.scan(step, x, (params["blocks"], cache))
+    elif cfg.block_type == "mamba2":
+        def step(h, inp):
+            p, c = inp
+            return _mamba_block_decode(p, h, cfg, c)
+
+        x, new_cache = jax.lax.scan(step, x, (params["blocks"], cache))
+    elif cfg.block_type == "rwkv6":
+        def step(h, inp):
+            p, c = inp
+            return _rwkv_block_decode(p, h, cfg, c)
+
+        x, new_cache = jax.lax.scan(step, x, (params["blocks"], cache))
+    elif cfg.block_type == "zamba_hybrid":
+        shared = params["shared"]
+
+        def group(h, inp):
+            p, c = inp
+
+            def inner(hh, q_c):
+                q, cc = q_c
+                return _mamba_block_decode(q, hh, cfg, cc)
+
+            h, mstates = jax.lax.scan(inner, h, (p, c["mamba"]))
+            h, kv = _dense_block_decode(shared, h, cfg, c["shared_kv"], pos)
+            return h, {"mamba": mstates, "shared_kv": kv}
+
+        x, new_cache = jax.lax.scan(group, x, (params["blocks"], cache))
+    else:
+        raise ValueError(cfg.block_type)
+
+    x = norm_apply(cfg.norm, params["final_ln"], x)
+    return _head(params, cfg, x)[:, 0], new_cache

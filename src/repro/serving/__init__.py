@@ -1,0 +1,1 @@
+from repro.serving.serve_loop import make_prefill_step, make_decode_step, generate

@@ -1,0 +1,68 @@
+"""Serving loop: batched prefill + greedy decode over per-family caches.
+
+The decode caches (GQA KV / MLA latent / SSD state / RWKV state) come from
+models.transformer.init_decode_cache; distributed.sharding.cache_pspecs gives
+their mesh layout (sequence-sharded KV -> GSPMD-partitioned softmax, the
+flash-decoding dataflow)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import decode_step, init_decode_cache, prefill_step
+
+
+def make_prefill_step(cfg, cache_len: int, mesh=None, in_shardings=None, out_shardings=None):
+    def fn(params, batch):
+        return prefill_step(params, cfg, batch, cache_len)
+
+    kw = {}
+    if in_shardings is not None:
+        kw = dict(in_shardings=in_shardings, out_shardings=out_shardings)
+    return jax.jit(fn, **kw)
+
+
+def make_decode_step(cfg, mesh=None, in_shardings=None, out_shardings=None, donate=True):
+    def fn(params, cache, tokens, pos):
+        return decode_step(params, cfg, cache, tokens, pos)
+
+    kw = dict(donate_argnums=(1,) if donate else ())
+    if in_shardings is not None:
+        kw.update(in_shardings=in_shardings, out_shardings=out_shardings)
+    return jax.jit(fn, **kw)
+
+
+def generate(params, cfg, prompt_batch, max_new_tokens: int, cache_len: int | None = None):
+    """Greedy generation for a batch of equal-length prompts. Returns
+    (B, max_new_tokens) int32 tokens."""
+    if cfg.frontend == "frames":
+        b, s = prompt_batch["frames"].shape[:2]
+        prompt_key = "frames"
+    else:
+        b, s = prompt_batch["tokens"].shape
+        prompt_key = "tokens"
+    cache_len = cache_len or (s + max_new_tokens)
+
+    logits, cache = jax.jit(lambda p, bt: prefill_step(p, cfg, bt, cache_len))(
+        params, prompt_batch
+    )
+    step = make_decode_step(cfg)
+
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    vlm_off = cfg.num_patches if cfg.frontend == "vlm" else 0
+    for i in range(max_new_tokens):
+        out.append(tok)
+        pos = jnp.full((b,), s + vlm_off + i, jnp.int32)
+        if cfg.frontend == "frames":
+            # audio stub decodes from the embedding of the sampled token id
+            emb = jax.nn.one_hot(tok, cfg.vocab_size, dtype=jnp.float32)
+            frame = emb @ jax.random.normal(jax.random.key(0), (cfg.vocab_size, cfg.d_model)) * 0.02
+            logits, cache = step(params, cache, frame[:, None, :], pos)
+        else:
+            logits, cache = step(params, cache, tok[:, None], pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,8 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule
+from repro.training.train_loop import (
+    build_grads_of,
+    build_train_step,
+    init_train_state,
+    make_train_step,
+    state_specs,
+)

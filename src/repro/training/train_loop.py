@@ -1,0 +1,156 @@
+"""Train step factory: pjit full-step (GSPMD collectives) with optional
+microbatch accumulation and optional int8-EF-compressed cross-pod reduction.
+
+The compressed path reuses the paper's Map/Reduce skeleton for gradients
+(DESIGN.md §4 form 2): shard_map manual over the 'pod' axis ONLY (data/model
+stay GSPMD-auto inside), per-pod grads psum'd over ('data',) implicitly by
+the inner auto partitioner, then the cross-pod (DCN) hop runs through
+distributed.compression.compressed_psum — the expensive link carries int8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import compression
+from repro.distributed.sharding import ShardingRules, batch_pspec, param_pspecs
+from repro.models.transformer import init_model, loss_fn
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def init_train_state(key, cfg, opt_cfg: AdamWConfig | None = None, compress: bool = False,
+                     n_pods: int = 1):
+    params = init_model(key, cfg)
+    state = {"params": params, "opt": adamw_init(params)}
+    if compress:
+        # error-feedback residuals are PER-POD state: leading pod dim,
+        # sharded P("pod", ...) through the manual shard_map.
+        err = compression.int8_ef_state(params)
+        state["ef_err"] = jax.tree.map(
+            lambda e: jnp.zeros((n_pods,) + e.shape, e.dtype), err
+        )
+    return state
+
+
+def state_specs(state, mesh, rules: ShardingRules = ShardingRules()):
+    pspecs = param_pspecs(state["params"], mesh, rules)
+    out = {
+        "params": pspecs,
+        "opt": {"m": pspecs, "v": pspecs, "step": P()},
+    }
+    if "ef_err" in state:
+        out["ef_err"] = pspecs
+    return out
+
+
+def build_grads_of(cfg, microbatches: int = 1):
+    """fn(params, batch) -> (loss, metrics, grads), with optional microbatch
+    accumulation (scan over a leading micro dim)."""
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, cfg, batch
+            )
+            return loss, metrics, grads
+
+        def micro(c, mb):
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, cfg, mb
+            )
+            acc_loss, acc_grads = c
+            return (acc_loss + loss, jax.tree.map(jnp.add, acc_grads, grads)), metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        mbs = jax.tree.map(lambda x: x.reshape(microbatches, -1, *x.shape[1:]), batch)
+        (loss, grads), metrics = jax.lax.scan(micro, (jnp.float32(0), zeros), mbs)
+        scale = 1.0 / microbatches
+        return loss * scale, jax.tree.map(lambda m: m[-1], metrics), jax.tree.map(
+            lambda g: g * scale, grads
+        )
+
+    return grads_of
+
+
+def build_train_step(cfg, opt_cfg: AdamWConfig, microbatches: int = 1):
+    """The raw (un-jitted) fn(state, batch) -> (state, metrics) — used by the
+    trainer (jitted below) and by the dry-run (jitted with explicit shardings)."""
+
+    grads_of = build_grads_of(cfg, microbatches)
+
+    def plain_step(state, batch):
+        loss, metrics, grads = grads_of(state["params"], batch)
+        params, opt, opt_metrics = adamw_update(state["params"], grads, state["opt"], opt_cfg)
+        new_state = dict(state, params=params, opt=opt)
+        return new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return plain_step
+
+
+def make_train_step(
+    cfg,
+    opt_cfg: AdamWConfig,
+    mesh=None,
+    rules: ShardingRules = ShardingRules(),
+    microbatches: int = 1,
+    cross_pod_compress: bool = False,
+    donate: bool = True,
+):
+    """Returns jit'd fn(state, batch) -> (state, metrics)."""
+    plain_step = build_train_step(cfg, opt_cfg, microbatches)
+    grads_of = build_grads_of(cfg, microbatches)
+
+    if mesh is None:
+        return jax.jit(plain_step, donate_argnums=(0,) if donate else ())
+
+    if not cross_pod_compress:
+        fn = plain_step
+    else:
+        if "pod" not in mesh.axis_names:
+            raise ValueError("cross_pod_compress needs a 'pod' mesh axis")
+        n_pods = mesh.shape["pod"]
+
+        def fn(state, batch):
+            # manual over 'pod' ONLY; 'data'/'model' stay GSPMD-auto inside
+            # (in_specs describe just the manual axis; auto shardings are
+            # inherited from the arrays).
+            pod_spec = jax.tree.map(
+                lambda x: P("pod", *([None] * (x.ndim - 1))), batch
+            )
+            ef_spec = jax.tree.map(
+                lambda e: P("pod", *([None] * (e.ndim - 1))), state["ef_err"]
+            )
+
+            def body(params, opt, ef_err, batch):
+                ef_err = jax.tree.map(lambda e: e[0], ef_err)  # drop pod dim
+                loss, metrics, grads = grads_of(params, batch)
+                grads, ef_err = compression.compressed_psum(grads, ef_err, ("pod",))
+                grads = jax.tree.map(lambda g: g / n_pods, grads)
+                params, opt, opt_metrics = adamw_update(params, grads, opt, opt_cfg)
+                ef_err = jax.tree.map(lambda e: e[None], ef_err)
+                out_metrics = jax.tree.map(
+                    lambda v: jax.lax.pmean(v, ("pod",)),
+                    {"loss": loss, **metrics},
+                )
+                return params, opt, ef_err, {**out_metrics, **opt_metrics}
+
+            shard_fn = jax.shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(P(), P(), ef_spec, pod_spec),
+                out_specs=(P(), P(), ef_spec, P()),
+                axis_names={"pod"},
+            )
+            params, opt, ef_err, metrics = shard_fn(
+                state["params"], state["opt"], state["ef_err"], batch
+            )
+            return dict(state, params=params, opt=opt, ef_err=ef_err), metrics
+
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())

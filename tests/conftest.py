@@ -1,0 +1,37 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_db():
+    """Small deterministic transaction DB shared across tests."""
+    from repro.data.synthetic import QuestConfig, gen_transactions
+
+    return gen_transactions(QuestConfig(num_transactions=300, num_items=32, avg_len=7, num_patterns=6, seed=7))
+
+
+def brute_force_frequent(dense: np.ndarray, min_count: int, max_k: int) -> dict:
+    """Oracle: exhaustive frequent-itemset mining via python sets."""
+    from itertools import combinations
+
+    rows = [frozenset(np.flatnonzero(r)) for r in dense]
+    items = sorted(set().union(*rows)) if rows else []
+    out = {}
+    prev = {(): None}
+    for k in range(1, max_k + 1):
+        level = {}
+        if k <= 2:
+            cands = combinations(items, k)
+        else:
+            seeds = [set(c) for c in prev]
+            cands = {tuple(sorted(s | {b})) for s in seeds for b in items if b not in s}
+        for c in cands:
+            cs = set(c)
+            s = sum(1 for r in rows if cs <= r)
+            if s >= min_count:
+                level[tuple(c)] = s
+        if not level:
+            break
+        out.update(level)
+        prev = level
+    return out

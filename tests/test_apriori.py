@@ -1,0 +1,91 @@
+"""Mining correctness: distributed Apriori vs exhaustive oracle (paper §3.3)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from conftest import brute_force_frequent
+from repro.core.apriori import AprioriConfig, mine
+from repro.core.rules import extract_rules
+from repro.core.son import mine_son
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_mine_matches_brute_force(small_db, impl):
+    cfg = AprioriConfig(min_support=0.08, max_k=6, count_impl=impl)
+    res = mine(small_db, cfg)
+    oracle = brute_force_frequent(small_db, res.min_count, 6)
+    assert res.as_dict() == oracle
+
+
+def test_naive_paper_map_equals_pruned_join(small_db):
+    """The paper's 'all subsets' map and the classical join+prune agree."""
+    base = mine(small_db, AprioriConfig(min_support=0.12, max_k=4, count_impl="jnp"))
+    naive = mine(
+        small_db,
+        AprioriConfig(min_support=0.12, max_k=4, count_impl="jnp", use_naive_paper_map=True),
+    )
+    assert base.as_dict() == naive.as_dict()
+
+
+def test_son_equals_levelwise(small_db):
+    cfg = AprioriConfig(min_support=0.08, max_k=6, count_impl="jnp")
+    assert mine_son(small_db, cfg, num_partitions=5).as_dict() == mine(small_db, cfg).as_dict()
+
+
+def test_min_count_semantics(small_db):
+    n = small_db.shape[0]
+    cfg = AprioriConfig(min_support=0.1, max_k=2, count_impl="jnp")
+    res = mine(small_db, cfg)
+    assert res.min_count == math.ceil(0.1 * n)
+    for _, (sets, sup) in res.levels.items():
+        assert (sup >= res.min_count).all()
+
+
+def test_checkpoint_resume_midway(small_db):
+    """Kill after level 2, resume from the checkpoint -> identical result."""
+    cfg = AprioriConfig(min_support=0.08, max_k=6, count_impl="jnp")
+    full = mine(small_db, cfg)
+
+    saved = {}
+
+    class Killed(Exception):
+        pass
+
+    def cb(k, levels):
+        saved["levels"] = {kk: (s.copy(), p.copy()) for kk, (s, p) in levels.items()}
+        saved["next_k"] = k + 1
+        if k == 2:
+            raise Killed
+
+    with pytest.raises(Killed):
+        mine(small_db, cfg, checkpoint_cb=cb)
+    resumed = mine(small_db, cfg, resume_state=saved)
+    assert resumed.as_dict() == full.as_dict()
+
+
+def test_support_query_and_rules(small_db):
+    cfg = AprioriConfig(min_support=0.08, max_k=4, count_impl="jnp")
+    res = mine(small_db, cfg)
+    d = res.as_dict()
+    some = next(iter(d))
+    assert res.support(some) == d[some]
+    assert res.support((0, 1, 2, 3, 4, 5, 6, 7)) == 0  # not frequent at this threshold
+
+    rules = extract_rules(res, min_confidence=0.6)
+    for r in rules[:50]:
+        s_union = d[tuple(sorted(r.antecedent + r.consequent))]
+        assert r.confidence == pytest.approx(s_union / d[r.antecedent])
+        assert r.confidence >= 0.6
+
+
+def test_empty_and_degenerate():
+    empty = np.zeros((10, 8), dtype=np.int8)
+    res = mine(empty, AprioriConfig(min_support=0.5, max_k=3, count_impl="jnp"))
+    assert res.total_frequent == 0
+
+    ones = np.ones((10, 4), dtype=np.int8)
+    res = mine(ones, AprioriConfig(min_support=0.9, max_k=5, count_impl="jnp"))
+    # every subset of {0,1,2,3} is frequent: 4 + 6 + 4 + 1
+    assert res.total_frequent == 15

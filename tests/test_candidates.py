@@ -1,0 +1,86 @@
+"""Property tests (hypothesis) for the host-side driver: encodings + join."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from itertools import combinations
+
+from repro.core.candidates import generate_candidates, lex_sort_rows, rows_isin
+from repro.core.itemsets import (
+    dense_from_lists,
+    itemsets_to_dense,
+    pack_bits,
+    singleton_itemsets,
+    unpack_bits,
+)
+
+
+@st.composite
+def itemset_table(draw, k=None):
+    k = k if k is not None else draw(st.integers(1, 4))
+    num_items = draw(st.integers(k, 24))
+    n_rows = draw(st.integers(2, 40))
+    rows = {
+        tuple(sorted(draw(st.permutations(range(num_items)))[:k])) for _ in range(n_rows)
+    }
+    return np.array(sorted(rows), dtype=np.int32), num_items
+
+
+@given(itemset_table())
+@settings(max_examples=60, deadline=None)
+def test_generate_candidates_matches_definition(table):
+    """Join+prune == {all (k+1)-sets whose every k-subset is in F_k}."""
+    freq, num_items = table
+    k = freq.shape[1]
+    got = {tuple(r) for r in generate_candidates(freq)}
+    fset = {tuple(r) for r in freq}
+    items = sorted({int(i) for r in freq for i in r})
+    expect = {
+        c
+        for c in combinations(items, k + 1)
+        if all(tuple(sorted(s)) in fset for s in combinations(c, k))
+    }
+    assert got == expect
+
+
+@given(itemset_table())
+@settings(max_examples=40, deadline=None)
+def test_candidates_sorted_and_unique(table):
+    freq, _ = table
+    cands = generate_candidates(freq)
+    if cands.shape[0] == 0:
+        return
+    # ascending within rows
+    assert (np.diff(cands, axis=1) > 0).all()
+    # unique rows
+    assert np.unique(cands, axis=0).shape[0] == cands.shape[0]
+
+
+@given(st.lists(st.lists(st.integers(0, 63), max_size=20), min_size=1, max_size=30))
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(lists):
+    dense = dense_from_lists([set(l) for l in lists], 64)
+    assert (unpack_bits(pack_bits(dense), 64) == dense).all()
+
+
+@given(st.integers(1, 100), st.integers(1, 5))
+@settings(max_examples=30, deadline=None)
+def test_itemsets_to_dense_rowsums(num_items_extra, k):
+    num_items = k + num_items_extra
+    rng = np.random.default_rng(k)
+    sets = np.sort(rng.choice(num_items, size=(7, k), replace=True), axis=1)
+    # dedupe within rows for valid itemsets
+    sets = np.array([sorted(set(r.tolist()))[:k] for r in sets if len(set(r.tolist())) >= k])
+    if sets.size == 0:
+        return
+    dense = itemsets_to_dense(sets, num_items)
+    assert (dense.sum(1) == sets.shape[1]).all()
+
+
+def test_rows_isin_and_lexsort():
+    table = np.array([[0, 1], [0, 2], [1, 2]], np.int32)
+    q = np.array([[0, 1], [1, 3], [1, 2]], np.int32)
+    assert rows_isin(q, table).tolist() == [True, False, True]
+    shuffled = table[::-1].copy()
+    assert (lex_sort_rows(shuffled) == table).all()
+    assert singleton_itemsets(3).tolist() == [[0], [1], [2]]

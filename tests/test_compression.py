@@ -1,0 +1,117 @@
+"""Int8 error-feedback gradient compression: quantization bounds, multi-device
+psum equivalence, and the compressed cross-pod train path."""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.compression import int8_ef_state, wire_bytes
+
+
+def test_wire_bytes():
+    grads = {"a": jnp.zeros((10, 10)), "b": jnp.zeros(5)}
+    assert wire_bytes(grads, compressed=False) == 105 * 4
+    assert wire_bytes(grads, compressed=True) == 105
+
+
+def test_ef_state_shapes():
+    params = {"w": jnp.ones((3, 4), jnp.bfloat16)}
+    err = int8_ef_state(params)
+    assert err["w"].shape == (3, 4) and err["w"].dtype == jnp.float32
+
+
+_PSUM = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.compression import compressed_psum, int8_ef_state
+
+    mesh = jax.make_mesh((4, 2), ("pod", "data"))
+    rng = np.random.default_rng(0)
+    g_global = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)  # one row per pod
+
+    def body(g, err):
+        out, new_err = compressed_psum({"g": g}, {"g": err}, ("pod",))
+        return out["g"], new_err["g"]
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(P("pod", None), P("pod", None)),
+                       out_specs=(P(None, None), P("pod", None)), axis_names={"pod"})
+
+    exact = np.asarray(g_global.sum(0))  # each pod holds one row
+    err = jnp.zeros((4, 64), jnp.float32)
+    approx, err = fn(g_global, err)
+    approx = np.asarray(approx)[0]
+    scale = np.abs(np.asarray(g_global)).max() / 127.0
+    assert np.abs(approx - exact).max() <= 4 * scale + 1e-6, (approx[:4], exact[:4])
+
+    # error feedback: repeated reduction of the SAME gradient converges in mean
+    g_err = jnp.zeros((4, 64), jnp.float32)
+    acc = np.zeros(64)
+    steps = 50
+    for _ in range(steps):
+        out, g_err = fn(g_global, g_err)
+        acc += np.asarray(out)[0]
+    bias = np.abs(acc / steps - exact).max()
+    assert bias < scale, f"EF bias {bias} vs scale {scale}"
+    print("COMPRESS_OK")
+    """
+)
+
+
+def test_compressed_psum_multidevice():
+    proc = subprocess.run(
+        [sys.executable, "-c", _PSUM],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "COMPRESS_OK" in proc.stdout
+
+
+_TRAIN = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import AxisType
+    from repro.configs import get_config
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_loop import init_train_state, make_train_step
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+    cfg = get_config("qwen1p5_4b").reduced()
+    state = init_train_state(jax.random.key(0), cfg, compress=True, n_pods=2)
+    step = make_train_step(cfg, AdamWConfig(peak_lr=3e-3, warmup_steps=2), mesh=mesh,
+                           cross_pod_compress=True, donate=False)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (8, 17))
+    batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+             "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+    losses = []
+    for _ in range(12):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses
+    print("COMPRESSED_TRAIN_OK", round(losses[0], 3), "->", round(losses[-1], 3))
+    """
+)
+
+
+def test_compressed_cross_pod_training():
+    """End-to-end: int8-EF cross-pod reduction still trains (loss decreases)."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _TRAIN],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "COMPRESSED_TRAIN_OK" in proc.stdout

@@ -1,0 +1,136 @@
+"""Supervisor restart/elastic re-mesh + straggler backup-task simulation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.distributed.fault_tolerance import (
+    SimulatedFailure,
+    Supervisor,
+    run_with_backup_tasks,
+)
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import build_train_step, init_train_state
+
+
+def _batch_fn(cfg, b=4, s=16):
+    def fn(step):
+        rng = np.random.default_rng(step)
+        toks = rng.integers(0, cfg.vocab_size, (b, s + 1))
+        return {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+        }
+
+    return fn
+
+
+def test_supervisor_restarts_after_failure(tmp_path):
+    cfg = get_config("deepseek_coder_33b").reduced()
+    opt = AdamWConfig(peak_lr=1e-3)
+
+    def make_mesh(n_nodes):
+        return None  # single-device CPU run; elasticity exercised in subprocess tests
+
+    def rebuild(mesh, state):
+        return jax.jit(build_train_step(cfg, opt), donate_argnums=())
+
+    killed = {"done": False}
+
+    def injector(step):
+        if step == 7 and not killed["done"]:
+            killed["done"] = True
+            raise SimulatedFailure(lost_nodes=1)
+
+    sup = Supervisor(str(tmp_path), make_mesh, rebuild, checkpoint_every=5)
+    state = init_train_state(jax.random.key(0), cfg)
+    state, history, info = sup.run(
+        state, None, _batch_fn(cfg), num_steps=12, num_nodes=4, failure_injector=injector
+    )
+    assert info["restarts"] == 1
+    assert info["final_nodes"] == 3  # elastic shrink recorded
+    assert int(jax.device_get(state["opt"]["step"])) == 12
+    assert killed["done"]
+
+
+def test_supervisor_resume_matches_uninterrupted(tmp_path):
+    """Failure + restore from checkpoint reproduces the uninterrupted run
+    exactly (deterministic data stream keyed by step count)."""
+    cfg = get_config("deepseek_coder_33b").reduced()
+    opt = AdamWConfig(peak_lr=1e-3)
+
+    def rebuild(mesh, state):
+        return jax.jit(build_train_step(cfg, opt), donate_argnums=())
+
+    base = init_train_state(jax.random.key(0), cfg)
+
+    sup_a = Supervisor(str(tmp_path / "a"), lambda n: None, rebuild, checkpoint_every=5)
+    clean, _, _ = sup_a.run(
+        jax.tree.map(jnp.copy, base), None, _batch_fn(cfg), num_steps=10, num_nodes=2
+    )
+
+    def injector(step):
+        if step == 6 and not getattr(injector, "hit", False):
+            injector.hit = True
+            raise SimulatedFailure()
+
+    sup_b = Supervisor(str(tmp_path / "b"), lambda n: None, rebuild, checkpoint_every=5)
+    failed, _, info = sup_b.run(
+        jax.tree.map(jnp.copy, base), None, _batch_fn(cfg), num_steps=10, num_nodes=2,
+        failure_injector=injector,
+    )
+    assert info["restarts"] == 1
+    for a, b in zip(jax.tree.leaves(clean["params"]), jax.tree.leaves(failed["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_backup_tasks_cut_straggler_makespan():
+    """Paper Fig 4: heterogeneous cluster (FHDSC) pays the slow node;
+    speculative backups recover most of the gap to homogeneous (FHSSC)."""
+    rng = np.random.default_rng(0)
+    shards = [rng.integers(0, 2, size=(rng.integers(500, 1500), 16)).astype(np.int8) for _ in range(32)]
+
+    def worker(shard):
+        return shard.sum()
+
+    homo = [1.0] * 4
+    hetero = [1.0, 1.0, 1.0, 0.25]  # one 4x-slower node
+
+    res_h, t_homo = run_with_backup_tasks(shards, worker, homo, backup=False)
+    res_n, t_no_backup = run_with_backup_tasks(shards, worker, hetero, backup=False)
+    res_b, t_backup = run_with_backup_tasks(shards, worker, hetero, backup=True)
+
+    # correctness is identical regardless of scheduling
+    assert [int(x) for x in res_h] == [int(x) for x in res_n] == [int(x) for x in res_b]
+    assert t_no_backup > t_homo  # the paper's FHDSC penalty
+    assert t_backup < t_no_backup  # speculation recovers part of it
+
+
+def test_mining_checkpoint_resume(tmp_path, small_db):
+    """Level-wise mining checkpoint: kill at level 2, resume, identical output
+    (the Supervisor pattern applied to the paper's own workload)."""
+    from repro.core.apriori import AprioriConfig, mine
+
+    cfg = AprioriConfig(min_support=0.08, max_k=5, count_impl="jnp")
+    full = mine(small_db, cfg)
+
+    import numpy as _np
+
+    saved = {}
+
+    class Boom(Exception):
+        pass
+
+    def cb(k, levels):
+        saved["levels"] = {kk: (s.copy(), p.copy()) for kk, (s, p) in levels.items()}
+        saved["next_k"] = k + 1
+        if k == 2:
+            raise Boom
+
+    try:
+        mine(small_db, cfg, checkpoint_cb=cb)
+    except Boom:
+        pass
+    resumed = mine(small_db, cfg, resume_state=saved)
+    assert resumed.as_dict() == full.as_dict()

@@ -1,0 +1,116 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.core.itemsets import itemsets_to_dense, pack_bits
+
+
+def _random_problem(n, i, k, seed=0, density=0.3):
+    rng = np.random.default_rng(seed)
+    t = (rng.random((n, i)) < density).astype(np.int8)
+    sizes = rng.integers(1, min(6, i) + 1, size=k)
+    cands = np.zeros((k, i), dtype=np.int8)
+    for row, s in enumerate(sizes):
+        cands[row, rng.choice(i, size=s, replace=False)] = 1
+    return t, cands, cands.sum(1).astype(np.int32)
+
+
+SHAPES = [
+    (8, 16, 4),        # tiny, sub-block everything
+    (100, 64, 33),     # ragged, non-multiples
+    (256, 128, 128),   # exact single blocks
+    (300, 130, 257),   # every dim unaligned
+    (512, 512, 300),   # multi-block N and I
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("operand_dtype", ["bf16", "int8"])
+def test_support_count_pallas_vs_ref(shape, operand_dtype):
+    n, i, k = shape
+    t, c, lengths = _random_problem(n, i, k, seed=n + i + k)
+    want = np.asarray(ref.support_count_ref(jnp.asarray(t), jnp.asarray(c), jnp.asarray(lengths)))
+    got = np.asarray(
+        ops.support_count(
+            jnp.asarray(t),
+            jnp.asarray(c),
+            jnp.asarray(lengths),
+            impl="pallas_interpret",
+            operand_dtype=operand_dtype,
+            block_n=128,
+            block_k=128,
+            block_i=128,
+        )
+    )
+    np.testing.assert_array_equal(got, want)  # counting is exact — no tolerance
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_support_count_packed_vs_dense(seed):
+    t, c, lengths = _random_problem(200, 96, 50, seed=seed)
+    want = np.asarray(ref.support_count_ref(jnp.asarray(t), jnp.asarray(c), jnp.asarray(lengths)))
+    got = np.asarray(
+        ref.support_count_packed_ref(jnp.asarray(pack_bits(t)), jnp.asarray(pack_bits(c)), block_k=32)
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_support_count_oracle_is_right():
+    """Pin the oracle itself against a hand-computed case."""
+    t = np.array([[1, 1, 0, 1], [1, 0, 0, 1], [0, 1, 1, 0]], np.int8)
+    cands = np.array([[0], [1], [3]], np.int32)  # singletons 0,1,3
+    dense = itemsets_to_dense(cands, 4)
+    got = np.asarray(ref.support_count_ref(jnp.asarray(t), jnp.asarray(dense), jnp.asarray([1, 1, 1], np.int32)))
+    assert got.tolist() == [2, 2, 2]
+    pair = itemsets_to_dense(np.array([[0, 3], [1, 2]], np.int32), 4)
+    got = np.asarray(ref.support_count_ref(jnp.asarray(t), jnp.asarray(pair), jnp.asarray([2, 2], np.int32)))
+    assert got.tolist() == [2, 1]
+
+
+def test_padding_rows_never_count():
+    """Padded candidates (|c| = -1) and zero-row transactions are inert."""
+    t, c, lengths = _random_problem(64, 32, 16, seed=3)
+    t_padded = np.concatenate([t, np.zeros((64, 32), np.int8)])
+    want = np.asarray(ref.support_count_ref(jnp.asarray(t), jnp.asarray(c), jnp.asarray(lengths)))
+    got = np.asarray(
+        ops.support_count(
+            jnp.asarray(t_padded), jnp.asarray(c), jnp.asarray(lengths), impl="pallas_interpret"
+        )
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_flash_attention_ref_vs_naive():
+    """GQA flash oracle vs dense softmax on a decode-offset case."""
+    import jax
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, 3, 8, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 10, 4, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 10, 4, 16)), jnp.float32)
+    out = ref.flash_attention_ref(q, k, v, causal=True)
+    assert out.shape == (2, 3, 8, 16)
+    assert not np.isnan(np.asarray(out)).any()
+    # last query attends over the full kv; first only up to offset
+    full = ref.flash_attention_ref(q[:, -1:], k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out[:, -1:]), np.asarray(full), rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(1, 32, 4, 16, 4), (2, 24, 6, 32, 3), (1, 100, 8, 64, 2)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_pallas_vs_ref(shape, causal):
+    """Pallas flash attention (interpret) vs fp32 softmax oracle, GQA shapes."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    b, s, h, d, group = shape
+    kvh = h // group
+    rng = np.random.default_rng(s * h)
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, d)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=16, block_k=16, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,132 @@
+"""Numerical-equivalence tests between the optimized (chunked / parallel)
+forms and their exact sequential oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.ref import flash_attention_ref
+from repro.models.attention import chunked_attention
+from repro.models.mamba2 import mamba2_apply, mamba2_apply_naive, mamba2_init
+
+
+@pytest.mark.parametrize("sq,sk,h,kvh", [(16, 16, 4, 4), (32, 32, 8, 2), (7, 19, 6, 3)])
+def test_chunked_attention_vs_ref(sq, sk, h, kvh):
+    rng = np.random.default_rng(sq * sk)
+    q = jnp.asarray(rng.standard_normal((2, sq, h, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, sk, kvh, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, sk, kvh, 16)), jnp.float32)
+    got = chunked_attention(q, k, v, causal=True, block_k=8, q_offset=sk - sq)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_k", [4, 16, 64])
+def test_chunked_attention_block_invariance(block_k):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 24, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 24, 4, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 24, 4, 8)), jnp.float32)
+    base = chunked_attention(q, k, v, causal=True, block_k=24)
+    got = chunked_attention(q, k, v, causal=True, block_k=block_k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("seq,chunk", [(32, 8), (64, 16), (24, 8)])
+def test_mamba2_chunked_vs_naive(seq, chunk):
+    """SSD chunk decomposition == exact per-step recurrence."""
+    cfg = get_config("zamba2_2p7b").reduced()
+    cfg = cfg.__class__(**{**cfg.__dict__, "ssm": cfg.ssm.__class__(
+        state_dim=16, head_dim=16, chunk=chunk)})
+    p = mamba2_init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(seq)
+    x = jnp.asarray(rng.standard_normal((2, seq, cfg.d_model)) * 0.5, jnp.float32)
+    fast = mamba2_apply(p, x, cfg)
+    slow = mamba2_apply_naive(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(slow), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_routing_properties():
+    """Top-k gates normalized; dead (padded) experts never routed; output finite."""
+    from repro.models.moe import moe_apply, moe_init, _router_probs
+
+    cfg = get_config("granite_moe_3b_a800m").reduced()
+    p = moe_init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    out, aux = moe_apply(p, x, cfg)
+    assert out.shape == x.shape and np.isfinite(np.asarray(out)).all()
+    assert 0.0 < float(aux) < 10.0
+    probs = _router_probs(p, x.reshape(-1, cfg.d_model), cfg)
+    dead = np.asarray(probs)[:, cfg.moe.num_experts :]
+    assert (dead == 0).all(), "padded experts must receive zero probability"
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor >= E/top_k (capacity >= T), nothing drops and the
+    MoE output equals the dense mixture of top-k experts."""
+    from repro.models.config import MoEConfig
+    from repro.models.moe import moe_apply, moe_init, _router_probs
+
+    cfg = get_config("dbrx_132b").reduced()
+    big_cap = MoEConfig(num_experts=4, top_k=2, d_ff_expert=64, capacity_factor=2.0)
+    cfg = cfg.__class__(**{**cfg.__dict__, "moe": big_cap})
+    p = moe_init(jax.random.key(1), cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 8, cfg.d_model)), jnp.float32)
+    out, _ = moe_apply(p, x, cfg)
+
+    # dense oracle
+    x2d = x.reshape(-1, cfg.d_model)
+    probs = _router_probs(p, x2d, cfg)
+    gv, ei = jax.lax.top_k(probs, 2)
+    gv = gv / gv.sum(-1, keepdims=True)
+    want = np.zeros_like(np.asarray(x2d))
+    for t in range(x2d.shape[0]):
+        for j in range(2):
+            e = int(ei[t, j])
+            h = np.asarray(x2d[t]) @ np.asarray(p["wi"][e])
+            g_, u_ = np.split(h, 2)
+            h = (g_ / (1 + np.exp(-g_))) * u_
+            want[t] += float(gv[t, j]) * (h @ np.asarray(p["wo"][e]))
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, cfg.d_model), want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("s,chunk", [(16, 4), (40, 8), (33, 16)])
+def test_rwkv_chunked_wkv_vs_stepwise(s, chunk):
+    """Chunk-parallel WKV (perf iter #4) == exact per-step recurrence."""
+    from repro.models.rwkv6 import _wkv_chunked, _wkv_scan
+
+    rng = np.random.default_rng(s * chunk)
+    b, h, dh = 2, 3, 8
+    r = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    lw = jnp.asarray(-np.exp(rng.standard_normal((b, s, h, dh)) - 1.0), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((h, dh)) * 0.3, jnp.float32)
+
+    y_fast, s_fast = _wkv_chunked(r, k, v, lw, u, chunk=chunk)
+    y_ref, s_ref = _wkv_scan(r, k, v, jnp.exp(lw), u, h, dh)
+    np.testing.assert_allclose(np.asarray(y_fast), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_fast), np.asarray(s_ref), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_grouped_equals_ungrouped():
+    """GShard grouping must not change results when capacity is drop-free."""
+    import dataclasses
+
+    from repro.models.config import MoEConfig
+    from repro.models.moe import moe_apply, moe_init
+
+    cfg = get_config("dbrx_132b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64, capacity_factor=2.0))
+    p = moe_init(jax.random.key(3), cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, 8, cfg.d_model)), jnp.float32)
+    out1, aux1 = moe_apply(p, x, cfg)                      # moe_groups = 1
+    cfg2 = dataclasses.replace(cfg, moe_groups=2)
+    out2, aux2 = moe_apply(p, x, cfg2)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=2e-4, atol=2e-5)

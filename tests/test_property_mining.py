@@ -1,0 +1,66 @@
+"""Hypothesis property tests on the mining system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.apriori import AprioriConfig, mine
+
+
+@st.composite
+def random_db(draw):
+    n = draw(st.integers(20, 120))
+    items = draw(st.integers(6, 20))
+    density = draw(st.floats(0.1, 0.5))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    return (rng.random((n, items)) < density).astype(np.int8)
+
+
+@given(random_db(), st.floats(0.05, 0.5))
+@settings(max_examples=25, deadline=None)
+def test_downward_closure_and_support_bounds(db, min_support):
+    """Anti-monotonicity: every subset of a frequent itemset is frequent with
+    support >= the superset's; all supports lie in [min_count, N]."""
+    res = mine(db, AprioriConfig(min_support=min_support, max_k=4, count_impl="jnp"))
+    d = res.as_dict()
+    n = db.shape[0]
+    for itemset, sup in d.items():
+        assert res.min_count <= sup <= n
+        if len(itemset) >= 2:
+            for drop in range(len(itemset)):
+                sub = tuple(x for j, x in enumerate(itemset) if j != drop)
+                assert sub in d, f"subset {sub} of frequent {itemset} missing"
+                assert d[sub] >= sup
+
+
+@given(random_db())
+@settings(max_examples=15, deadline=None)
+def test_threshold_monotonicity(db):
+    """Raising min_support can only shrink the frequent set (and the survivors
+    keep identical supports)."""
+    lo = mine(db, AprioriConfig(min_support=0.1, max_k=3, count_impl="jnp")).as_dict()
+    hi = mine(db, AprioriConfig(min_support=0.3, max_k=3, count_impl="jnp")).as_dict()
+    assert set(hi) <= set(lo)
+    for k, v in hi.items():
+        assert lo[k] == v
+
+
+@given(random_db(), st.integers(2, 5))
+@settings(max_examples=10, deadline=None)
+def test_row_permutation_invariance(db, seed):
+    """Transaction order must not matter (the Map phase is a bag, not a list)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(db.shape[0])
+    cfg = AprioriConfig(min_support=0.15, max_k=3, count_impl="jnp")
+    assert mine(db, cfg).as_dict() == mine(db[perm], cfg).as_dict()
+
+
+@given(random_db())
+@settings(max_examples=10, deadline=None)
+def test_supports_equal_exact_counts(db):
+    """Reported support == literal containment count for every winner."""
+    res = mine(db, AprioriConfig(min_support=0.2, max_k=3, count_impl="jnp"))
+    for itemset, sup in list(res.as_dict().items())[:50]:
+        mask = db[:, list(itemset)].all(axis=1)
+        assert int(mask.sum()) == sup
