@@ -7,7 +7,11 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
 plus the framework's own kernel/driver benches (support-count kernel,
 candidate generation, SON vs level-wise rounds).
 
-Run: PYTHONPATH=src python -m benchmarks.run  [--quick]
+Run: PYTHONPATH=src python -m benchmarks.run  [--quick] [--json out.json]
+
+``--json`` additionally emits the rows as machine-readable JSON
+(name/us/derived per row + backend metadata) so CI can archive the perf
+trajectory (BENCH_*.json artifacts) across PRs.
 """
 
 from __future__ import annotations
@@ -31,10 +35,10 @@ def row(name, us, derived=""):
 
 def _time(fn, reps=3):
     fn()  # warmup / compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(reps):
         fn()
-    return (time.time() - t0) / reps * 1e6
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
 # ------------------------------------------------------------------ Fig 5 ----
@@ -65,8 +69,8 @@ db = gen_transactions(QuestConfig(num_transactions=%d, num_items=512, seed=1))
 mesh = None
 kw = {}
 if n_dev > 1:
-    mesh = jax.make_mesh((n_dev, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_auto_mesh
+    mesh = make_auto_mesh((n_dev, 1), ("data", "model"))
     kw = dict(data_axes=("data",), model_axis="model")
 cfg = AprioriConfig(min_support=0.02, max_k=4, count_impl="jnp", **kw)
 mine(db, cfg, mesh=mesh)   # warm
@@ -79,7 +83,8 @@ print(json.dumps({"n_dev": n_dev, "seconds": dt, "frequent": res.total_frequent}
             [sys.executable, "-c", script, str(n_dev)],
             capture_output=True, text=True, timeout=1800,
             env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
-                 "HOME": os.environ.get("HOME", "/root")},
+                 "HOME": os.environ.get("HOME", "/root"),
+                 "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
         )
         if proc.returncode != 0:
             row(f"fig5_nodes_{n_dev}", -1, "FAILED")
@@ -113,33 +118,58 @@ def bench_fig4_straggler(quick=False):
 
 # ----------------------------------------------------------------- kernel ----
 def bench_kernel_support_count(quick=False):
-    """MXU containment-matmul kernel vs jnp oracle (wall us + derived GB/s)."""
+    """Dense MXU containment matmul vs packed uint32 bitset counting.
+
+    The dense-vs-packed pair always runs at the roofline comparison shape
+    (16384, 1024, 4096) — quick mode only drops the rep count — so the
+    BENCH_*.json trajectory tracks the same point on every backend.
+    """
     import jax
     import jax.numpy as jnp
 
     from repro.kernels import ops, ref
 
-    n, i, k = (4096, 512, 1024) if quick else (16384, 1024, 4096)
+    n, i, k = 16384, 1024, 4096
+    reps = 1 if quick else 3
     rng = np.random.default_rng(0)
     t = jnp.asarray((rng.random((n, i)) < 0.2).astype(np.int8))
-    c = jnp.asarray((rng.random((k, i)) < 0.02).astype(np.int8))
-    lengths = jnp.maximum(1, c.sum(1)).astype(jnp.int32)
+    c_np = (rng.random((k, i)) < 0.02).astype(np.int8)
+    c_np[c_np.sum(1) == 0, 0] = 1   # every candidate has >= 1 item (lengths contract)
+    c = jnp.asarray(c_np)
+    lengths = c.sum(1).astype(jnp.int32)
 
     jit_ref = jax.jit(lambda: ref.support_count_ref(t, c, lengths))
-    us = _time(lambda: jit_ref().block_until_ready())
+    us_dense = _time(lambda: jit_ref().block_until_ready(), reps=reps)
     flops = 2.0 * n * i * k
-    row("kernel_support_ref_jnp", us, f"GFLOP/s={flops/us*1e-3:.1f}")
+    row("kernel_support_ref_jnp", us_dense, f"GFLOP/s={flops/us_dense*1e-3:.1f}")
 
+    # packed counting path (pre-packed operands, device-resident — the
+    # format core.apriori keeps across the level loop). 'auto' resolves to
+    # the Pallas VPU kernel on TPU, the jnp bitset oracle elsewhere.
+    impl = ops.resolve_impl("auto")
     tp, cp = jnp.asarray(np_pack(t)), jnp.asarray(np_pack(c))
-    jit_packed = jax.jit(lambda: ref.support_count_packed_ref(tp, cp))
-    us = _time(lambda: jit_packed().block_until_ready())
-    row("kernel_support_packed_vpu", us, f"bitops_bytes={n*k*i/8/1e9:.2f}GB")
+    jit_packed = jax.jit(lambda: ops.support_count_packed(tp, cp, lengths, impl="auto"))
+    us_packed = _time(lambda: jit_packed().block_until_ready(), reps=reps)
+    row(
+        "kernel_support_packed_pallas",
+        us_packed,
+        f"impl={impl};speedup_vs_dense={us_dense/us_packed:.1f}x;"
+        f"packed_bytes={(n + k) * (i // 8) / 1e6:.1f}MB",
+    )
+
+    # packed path including on-device bit-packing of dense operands
+    jit_e2e = jax.jit(lambda: ops.support_count(t, c, lengths, impl="packed"))
+    us_e2e = _time(lambda: jit_e2e().block_until_ready(), reps=reps)
+    row("kernel_support_packed_with_packing", us_e2e, f"pack_overhead={us_e2e/us_packed:.2f}x")
 
     # pallas interpret (semantics validation path; wall time not meaningful on CPU)
     small_t, small_c, small_l = t[:512], c[:256], lengths[:256]
     f_pal = lambda: np.asarray(ops.support_count(small_t, small_c, small_l, impl="pallas_interpret"))
     us = _time(f_pal, reps=1)
     row("kernel_support_pallas_interpret_512x256", us, "correctness_path")
+    f_pp = lambda: np.asarray(ops.support_count(small_t, small_c, small_l, impl="packed_interpret"))
+    us = _time(f_pp, reps=1)
+    row("kernel_support_packed_interpret_512x256", us, "correctness_path")
 
 
 def np_pack(dense):
@@ -194,9 +224,26 @@ def bench_roofline_from_dryrun(quick=False):
             f"dominant={r['dominant']};useful={c['useful_flops_ratio']:.3f}")
 
 
+def bench_mine_representations(quick=False):
+    """End-to-end mine(): dense vs packed device representation."""
+    from repro.core.apriori import AprioriConfig, mine
+    from repro.data.synthetic import QuestConfig, gen_transactions
+
+    n = 4_000 if quick else 16_000
+    db = gen_transactions(QuestConfig(num_transactions=n, num_items=512, seed=1))
+    cfg_d = AprioriConfig(min_support=0.02, max_k=4, count_impl="auto")
+    us_dense = _time(lambda: mine(db, cfg_d), reps=1)
+    row(f"mine_dense_n{n}", us_dense, f"transactions={n}")
+    cfg_p = AprioriConfig(min_support=0.02, max_k=4, count_impl="auto", representation="packed")
+    us_packed = _time(lambda: mine(db, cfg_p), reps=1)
+    row(f"mine_packed_n{n}", us_packed,
+        f"transactions={n};speedup_vs_dense={us_dense/us_packed:.2f}x")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="OUT", help="also write rows as JSON")
     args, _ = ap.parse_known_args()
     q = args.quick
 
@@ -207,7 +254,21 @@ def main() -> None:
     bench_kernel_support_count(q)
     bench_candidate_generation(q)
     bench_son_vs_levelwise(q)
+    bench_mine_representations(q)
     bench_roofline_from_dryrun(q)
+
+    if args.json:
+        import jax
+
+        payload = {
+            "backend": jax.default_backend(),
+            "quick": q,
+            "unix_time": time.time(),
+            "rows": [{"name": n, "us_per_call": u, "derived": d} for n, u, d in ROWS],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(ROWS)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -14,7 +14,6 @@ if "XLA_FLAGS" not in os.environ:
 
 import time
 
-import jax
 
 from repro.core.apriori import AprioriConfig, mine
 from repro.core.son import mine_son
@@ -31,8 +30,9 @@ def main():
     print(f"standalone: {t1:.2f}s, {r1.total_frequent} itemsets")
 
     # 4x2 'cluster' (4-way transaction sharding x 2-way candidate sharding)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_auto_mesh
+
+    mesh = make_auto_mesh((4, 2), ("data", "model"))
     cfg = AprioriConfig(min_support=0.02, max_k=5, count_impl="jnp",
                         data_axes=("data",), model_axis="model")
     t0 = time.time(); r2 = mine(db, cfg, mesh=mesh); t2 = time.time() - t0

@@ -7,6 +7,7 @@ CONFIG = dict(
     mining=AprioriConfig(
         min_support=0.01,
         max_k=8,
+        representation="packed",   # uint32 bitsets: the roofline-optimal store (DESIGN.md §4)
         data_axes=("data",),
         model_axis="model",
     ),

@@ -11,6 +11,16 @@ The candidate axis is additionally sharded over the 'model' mesh axis, a 2-D
 decomposition of the paper's 1-D map phase (DESIGN.md §5). Padding rules:
 transactions pad with zero rows (inert), candidates pad with |c| = -1 rows
 (never match). Counting is exact (int32).
+
+Two device representations of the transaction store (DESIGN.md §4):
+  * ``dense``  — {0,1} int8 (N, I); counting is the MXU containment matmul.
+  * ``packed`` — uint32 bitsets (N, ceil(I/32)); counting is the VPU
+    bitwise-AND containment kernel, 8–32× less HBM traffic per cell.
+The DB is packed + device-placed ONCE (``place_db``), and a level's
+candidate passes run as a depth-2 pipeline — the host packs and dispatches
+pass p+1 while the device counts pass p, blocking on a pass only after its
+successor is in flight (and on the last one when the prune needs the
+values).
 """
 
 from __future__ import annotations
@@ -36,12 +46,14 @@ class AprioriConfig:
     min_support: float = 0.01          # fraction of |DB|; min_count = ceil(frac * N)
     max_k: int = 8                     # maximum itemset size to mine
     count_impl: str = "auto"           # auto | jnp | pallas | pallas_interpret
+    representation: str = "dense"      # dense {0,1} int8 | packed uint32 bitsets
     data_axes: tuple = ("data",)       # mesh axes sharding the transaction rows
     model_axis: str | None = None      # mesh axis sharding the candidate rows
     candidate_pad: int = 256           # K padded to a multiple (jit bucket + divisibility)
     max_candidates_per_pass: int = 1 << 16  # split huge candidate sets across passes
     use_naive_paper_map: bool = False  # paper's 'all subsets' enumeration (small I only)
-    operand_dtype: str = "bf16"        # kernel operand mode (bf16 MXU / int8)
+    operand_dtype: str = "bf16"        # dense kernel operand mode (bf16 MXU / int8)
+    packed_mode: str = "and_cmp"       # packed kernel containment mode (| popcount)
 
 
 @dataclasses.dataclass
@@ -91,14 +103,29 @@ def make_count_step(
 ) -> Callable:
     """Build the jit'd Map/Reduce support-count step.
 
-    fn(T (N,I) int8 sharded over data_axes, C (Kp,I) int8, lengths (Kp,) int32)
-    -> counts (Kp,) int32, replicated over data axes, sharded over model_axis.
+    Dense:  fn(T (N,I) int8,  C (Kp,I) int8,  lengths (Kp,) int32)
+    Packed: fn(T (N,W) uint32, C (Kp,W) uint32, lengths (Kp,) int32)
+    with T sharded over data_axes -> counts (Kp,) int32, replicated over the
+    data axes, sharded over model_axis. The sharded path is identical for
+    both representations — P(data_axes, None) over rows, whatever the row
+    payload is (DESIGN.md §2).
     """
+    if cfg.representation == "packed":
 
-    def local_count(t, c, ln):
-        return kops.support_count(
-            t, c, ln, impl=cfg.count_impl, operand_dtype=cfg.operand_dtype
-        )
+        def local_count(t, c, ln):
+            return kops.support_count_packed(
+                t, c, ln, impl=cfg.count_impl, mode=cfg.packed_mode
+            )
+
+    elif cfg.representation == "dense":
+
+        def local_count(t, c, ln):
+            return kops.support_count(
+                t, c, ln, impl=cfg.count_impl, operand_dtype=cfg.operand_dtype
+            )
+
+    else:
+        raise ValueError(f"representation must be dense|packed, got {cfg.representation!r}")
 
     if mesh is None or math.prod(mesh.shape.values()) == 1:
         return jax.jit(local_count)
@@ -112,26 +139,72 @@ def make_count_step(
     return mapreduce(job, mesh, in_specs=in_specs, out_specs=P(cfg.model_axis))
 
 
-def _count_level(count_step, t_dev, cand_sets: np.ndarray, num_items: int, cfg: AprioriConfig, mesh):
-    """Count supports for one level's candidates, in passes, padded/bucketed."""
-    k_total = cand_sets.shape[0]
+def place_db(t_np: np.ndarray, cfg: AprioriConfig, mesh) -> jax.Array:
+    """Encode + device-place the transaction store ONCE for the whole mine.
+
+    Packs to uint32 bitsets when ``cfg.representation == "packed"``, pads
+    rows to the data-shard count (zero rows are inert for both
+    representations), and row-shards over the data axes — the HDFS block
+    layout of the paper, P(data_axes, None) regardless of row payload.
+    """
+    store = enc.pack_bits(t_np) if cfg.representation == "packed" else t_np
+    if mesh is None:
+        return jnp.asarray(store)
+    data_shards = math.prod(mesh.shape[a] for a in cfg.data_axes)
+    t_pad, _ = pad_rows_to_shards(store, data_shards)
+    return jax.device_put(t_pad, NamedSharding(mesh, P(cfg.data_axes, None)))
+
+
+def _candidate_quantum(cfg: AprioriConfig, mesh) -> int:
+    """Pad quantum for the candidate axis: at least ``candidate_pad``, and a
+    multiple of the model-shard count so every bucket splits evenly over
+    P(model_axis) (``_pad_bucket`` only doubles, which preserves the
+    divisibility — e.g. 3 shards with pad 256 give buckets 258, 516, ...)."""
     model_shards = mesh.shape[cfg.model_axis] if (mesh is not None and cfg.model_axis) else 1
     quantum = max(cfg.candidate_pad, model_shards)
+    return ((quantum + model_shards - 1) // model_shards) * model_shards
+
+
+def _count_level(count_step, t_dev, cand_sets: np.ndarray, num_items: int, cfg: AprioriConfig, mesh):
+    """Count supports for one level's candidates, in passes, padded/bucketed.
+
+    Passes form a depth-2 pipeline: the host builds and device-places the
+    candidate tensors for pass p+1 while the device counts pass p, and only
+    syncs a pass once its successor is dispatched (the last sync happens when
+    the caller's prune needs the values, DESIGN.md §5). The bounded depth
+    keeps at most two passes of candidate tensors live on device, preserving
+    the memory bound ``max_candidates_per_pass`` exists to provide.
+    """
+    k_total = cand_sets.shape[0]
+    quantum = _candidate_quantum(cfg, mesh)
+    packed = cfg.representation == "packed"
     counts = np.zeros(k_total, dtype=np.int64)
+    pending = []
+
+    def _drain(limit):
+        while len(pending) > limit:
+            start, m, out = pending.pop(0)
+            counts[start : start + m] = np.asarray(out)[:m]
+
     for start in range(0, k_total, cfg.max_candidates_per_pass):
         chunk = cand_sets[start : start + cfg.max_candidates_per_pass]
         kp = _pad_bucket(chunk.shape[0], quantum)
-        c_dense = np.zeros((kp, num_items), dtype=np.int8)
-        c_dense[: chunk.shape[0]] = enc.itemsets_to_dense(chunk, num_items)
+        if packed:
+            c_host = np.zeros((kp, enc.packed_words(num_items)), dtype=np.uint32)
+            c_host[: chunk.shape[0]] = enc.itemsets_to_packed(chunk, num_items)
+        else:
+            c_host = np.zeros((kp, num_items), dtype=np.int8)
+            c_host[: chunk.shape[0]] = enc.itemsets_to_dense(chunk, num_items)
         lengths = np.full(kp, -1, dtype=np.int32)
         lengths[: chunk.shape[0]] = chunk.shape[1]
         if mesh is not None:
-            c_dev = jax.device_put(c_dense, NamedSharding(mesh, P(cfg.model_axis, None)))
+            c_dev = jax.device_put(c_host, NamedSharding(mesh, P(cfg.model_axis, None)))
             len_dev = jax.device_put(lengths, NamedSharding(mesh, P(cfg.model_axis)))
         else:
-            c_dev, len_dev = c_dense, lengths
-        out = np.asarray(count_step(t_dev, c_dev, len_dev))
-        counts[start : start + chunk.shape[0]] = out[: chunk.shape[0]]
+            c_dev, len_dev = jnp.asarray(c_host), jnp.asarray(lengths)
+        pending.append((start, chunk.shape[0], count_step(t_dev, c_dev, len_dev)))
+        _drain(limit=1)   # sync pass p only once pass p+1 is in flight
+    _drain(limit=0)
     return counts
 
 
@@ -152,13 +225,9 @@ def mine(
     n, num_items = t_np.shape
     min_count = max(1, math.ceil(cfg.min_support * n))
 
-    # --- place the DB once: row-sharded over the data axes (HDFS layout) ---
-    if mesh is not None:
-        data_shards = math.prod(mesh.shape[a] for a in cfg.data_axes)
-        t_pad, _ = pad_rows_to_shards(t_np, data_shards)
-        t_dev = jax.device_put(t_pad, NamedSharding(mesh, P(cfg.data_axes, None)))
-    else:
-        t_dev = jnp.asarray(t_np)
+    # --- encode + place the DB once: row-sharded over the data axes (HDFS
+    # layout); packed uint32 bitsets stay device-resident for the whole loop
+    t_dev = place_db(t_np, cfg, mesh)
     count_step = make_count_step(mesh, cfg)
 
     levels = dict(resume_state["levels"]) if resume_state else {}

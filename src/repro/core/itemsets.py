@@ -6,8 +6,14 @@ vocabulary: transactions (N, I) and candidate itemsets (K, I).  Containment
 int8 matmul with an exact int32 accumulation — the MXU-native reshape of the
 paper's per-transaction subset scan (DESIGN.md §2).
 
-A packed uint32 bitset format (N, ceil(I/32)) is provided for host-side
-storage and for the VPU popcount counting path.
+A packed uint32 bitset format (N, ceil(I/32)) is the bandwidth-optimal device
+format (DESIGN.md §4): containment ``c ⊆ t`` becomes per-word
+``t & c == c`` on the VPU, at 1 bit per cell instead of 8–16.  Packing
+helpers here are host-side NumPy; the device-side (jnp) packer lives in
+``kernels.ops``.  Packed padding invariants: padded transaction rows are
+all-zero words (inert), padded candidate rows are all-zero words with
+``|c| = -1`` sentinels in the lengths vector (never match), and the word
+axis pads with zero words on both operands (DESIGN.md §3).
 """
 
 from __future__ import annotations
@@ -58,6 +64,48 @@ def unpack_bits(packed: np.ndarray, num_items: int) -> np.ndarray:
     shifts = np.arange(32, dtype=np.uint32)
     bits = (packed[:, :, None] >> shifts) & np.uint32(1)
     return bits.reshape(n, words * 32)[:, :num_items].astype(np.int8)
+
+
+def packed_words(num_items: int) -> int:
+    """Number of uint32 words holding ``num_items`` bits."""
+    return (num_items + 31) // 32
+
+
+def itemsets_to_packed(itemsets: np.ndarray, num_items: int) -> np.ndarray:
+    """(K, k) arrays of item ids -> packed uint32 bitsets (K, ceil(I/32)).
+
+    Direct scatter into words — never materialises the (K, I) dense matrix,
+    so candidate packing stays O(K·k) on the driver regardless of vocabulary
+    size.
+    """
+    itemsets = np.asarray(itemsets)
+    if itemsets.ndim != 2:
+        raise ValueError("itemsets must be (K, k)")
+    if itemsets.size and (itemsets.min() < 0 or itemsets.max() >= num_items):
+        raise ValueError("item id out of range")
+    k_count = itemsets.shape[0]
+    out = np.zeros((k_count, packed_words(num_items)), dtype=np.uint32)
+    rows = np.repeat(np.arange(k_count), itemsets.shape[1])
+    ids = itemsets.ravel().astype(np.int64)
+    np.bitwise_or.at(out, (rows, ids >> 5), np.uint32(1) << (ids & 31).astype(np.uint32))
+    return out
+
+
+def pad_packed(packed: np.ndarray, row_multiple: int = 1, word_multiple: int = 1) -> np.ndarray:
+    """Zero-pad a packed (R, W) bitset to row/word-count multiples.
+
+    Zero rows are inert transactions; zero words add no items — both sides of
+    the ``t & c == c`` containment test are unchanged by this padding
+    (candidate *row* padding must additionally carry ``|c| = -1`` in the
+    lengths vector, which the caller owns).
+    """
+    packed = np.asarray(packed, dtype=np.uint32)
+    r, w = packed.shape
+    rp = (-r) % row_multiple
+    wp = (-w) % word_multiple
+    if rp == 0 and wp == 0:
+        return packed
+    return np.pad(packed, ((0, rp), (0, wp)))
 
 
 def singleton_itemsets(num_items: int) -> np.ndarray:

@@ -17,6 +17,36 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:  # jax >= 0.5 exports shard_map at top level
+    _new_shard_map = jax.shard_map
+    _old_shard_map = None
+except AttributeError:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+
+    _new_shard_map = None
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None, check_vma=None):
+    """Version-portable ``shard_map`` (the repo's single entry point).
+
+    Accepts the jax >= 0.5 surface (``axis_names`` = manual axes,
+    ``check_vma``) and translates to the jax 0.4 experimental API
+    (``auto`` = complementary axis set, ``check_rep``) when needed.
+    """
+    if _new_shard_map is not None:
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return _new_shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    kw = {}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return _old_shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
 _REDUCERS = {
     "sum": jax.lax.psum,
     "max": jax.lax.pmax,
@@ -63,7 +93,7 @@ def mapreduce(
         partial = job.map_fn(*args)
         return jax.tree.map(lambda x: reducer(x, axes), partial)
 
-    fn = jax.shard_map(_mapper, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs)
+    fn = shard_map(_mapper, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs)
     return jax.jit(fn) if jit else fn
 
 
@@ -98,8 +128,12 @@ def shard_rows(mesh: jax.sharding.Mesh, axes: tuple[str, ...]) -> jax.sharding.N
 def pad_rows_to_shards(arr: jnp.ndarray, num_shards: int):
     """Pad axis 0 to a multiple of num_shards with zero rows.
 
-    Zero transaction rows are inert for support counting (every real candidate
-    has |c| >= 1 and <0-row, c> == 0 != |c|). Returns (padded, original_n).
+    Zero transaction rows are inert for support counting in both device
+    representations: dense — every real candidate has |c| >= 1 and
+    <0-row, c> == 0 != |c|; packed uint32 — a zero row misses every set
+    candidate bit, so ``t & c == c`` fails (DESIGN.md §3). The row partition
+    is payload-agnostic: P(data_axes, None) over int8 items or uint32 words
+    alike. Returns (padded, original_n).
     """
     import numpy as np
 

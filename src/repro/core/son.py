@@ -54,18 +54,10 @@ def mine_son(
         for k, (sets, _) in _mine_local(part, local_min, cfg.max_k).items():
             union.setdefault(k, set()).update(tuple(int(x) for x in row) for row in sets)
 
-    # ---- phase 2: one exact global count of the union ----
+    # ---- phase 2: one exact global count of the union (the same encode +
+    # place + count path as the level-wise miner, incl. packed bitsets) ----
     count_step = ap.make_count_step(mesh, cfg)
-    if mesh is not None:
-        import jax
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        from repro.core.mapreduce import pad_rows_to_shards
-
-        shards = math.prod(mesh.shape[a] for a in cfg.data_axes)
-        t_pad, _ = pad_rows_to_shards(t_np, shards)
-        t_dev = jax.device_put(t_pad, NamedSharding(mesh, P(cfg.data_axes, None)))
-    else:
-        t_dev = t_np
+    t_dev = ap.place_db(t_np, cfg, mesh)
     levels = {}
     for k in sorted(union):
         cands = np.array(sorted(union[k]), dtype=np.int32)

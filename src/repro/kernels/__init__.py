@@ -1,2 +1,2 @@
 from repro.kernels import ops, ref
-from repro.kernels.ops import support_count
+from repro.kernels.ops import pack_bits_device, support_count, support_count_packed

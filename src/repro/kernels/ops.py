@@ -4,7 +4,14 @@ Handles shape padding to block multiples, impl dispatch ('auto' resolves to
 the Pallas kernel on TPU and the jnp oracle on CPU — interpret-mode Pallas is
 kept for tests, where it validates the kernel body semantics), and padding
 semantics (padded transactions are zero rows; padded candidates get |c| = -1
-so they can never match).
+so they can never match; packed operands additionally pad the word axis with
+zero words — see DESIGN.md §3).
+
+Two counting entry points:
+  * :func:`support_count` — dense {0,1} operands. ``impl="packed"`` packs
+    them to uint32 bitsets on device and routes through the packed path.
+  * :func:`support_count_packed` — pre-packed uint32 operands (the format
+    ``core.apriori`` keeps device-resident across the whole level loop).
 """
 
 from __future__ import annotations
@@ -17,6 +24,7 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.support_count import support_count_pallas
+from repro.kernels.support_count_packed import support_count_packed_pallas
 
 
 def _round_up(x: int, m: int) -> int:
@@ -27,6 +35,21 @@ def resolve_impl(impl: str) -> str:
     if impl != "auto":
         return impl
     return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+@functools.partial(jax.jit, static_argnames=("num_items",))
+def pack_bits_device(dense: jax.Array, num_items: int | None = None) -> jax.Array:
+    """Device-side dense {0,1} (R, I) -> packed uint32 (R, ceil(I/32)).
+
+    Little-endian bits per word — the jnp twin of ``core.itemsets.pack_bits``.
+    """
+    r, i = dense.shape
+    if num_items is not None:
+        assert i == num_items
+    words = (i + 31) // 32
+    d = jnp.pad(dense.astype(jnp.uint32), ((0, 0), (0, words * 32 - i)))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (d.reshape(r, words, 32) << shifts).sum(axis=2, dtype=jnp.uint32)
 
 
 def support_count(
@@ -43,7 +66,10 @@ def support_count(
     """Support counts of K candidates over N transactions (exact int32).
 
     Accepts arbitrary (N, I, K); pads to kernel block multiples internally.
-    impl: auto | jnp | pallas | pallas_interpret | packed
+    impl: auto | jnp | pallas | pallas_interpret
+        | packed | packed_jnp | packed_pallas | packed_interpret
+    The packed impls bit-pack the dense operands on device and dispatch to
+    :func:`support_count_packed` ('packed' resolves like 'auto').
     """
     impl = resolve_impl(impl)
     n, i = t_dense.shape
@@ -54,8 +80,17 @@ def support_count(
         from repro.kernels.blocked import support_count_blocked
 
         return support_count_blocked(t_dense, c_dense, lengths)
-    if impl == "packed":
-        raise ValueError("packed impl requires pre-packed uint32 operands; use ref.support_count_packed_ref")
+    if impl == "packed" or impl.startswith("packed_"):
+        sub = "auto" if impl == "packed" else impl[len("packed_") :]
+        sub = {"interpret": "pallas_interpret"}.get(sub, sub)
+        return support_count_packed(
+            pack_bits_device(t_dense, i),
+            pack_bits_device(c_dense, i),
+            lengths,
+            impl=sub,
+            block_n=block_n,
+            block_k=block_k,
+        )
     if impl not in ("pallas", "pallas_interpret"):
         raise ValueError(f"unknown impl {impl!r}")
 
@@ -75,6 +110,53 @@ def support_count(
         block_k=block_k,
         block_i=block_i,
         operand_dtype=operand_dtype,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return counts[:k]
+
+
+def support_count_packed(
+    t_packed,
+    c_packed,
+    lengths,
+    *,
+    impl: str = "auto",
+    block_n: int = 256,
+    block_k: int = 256,
+    block_w: int = 8,
+    mode: str = "and_cmp",
+):
+    """Support counts over packed uint32 bitset operands (exact int32).
+
+    t_packed: (N, W) uint32, c_packed: (K, W) uint32, lengths: (K,) int32
+    with |c| = -1 marking padded candidate rows. Accepts arbitrary (N, W, K);
+    pads rows/words to kernel block multiples internally (zero words / zero
+    rows / -1 lengths — all inert, DESIGN.md §3).
+    impl: auto | jnp | pallas | pallas_interpret
+    """
+    impl = resolve_impl(impl)
+    n, w = t_packed.shape
+    k = c_packed.shape[0]
+    if impl == "jnp":
+        return ref.support_count_packed_ref(t_packed, c_packed, lengths)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown packed impl {impl!r}")
+
+    block_n = min(block_n, _round_up(n, 8))
+    block_k = min(block_k, _round_up(k, 128))
+    block_w = min(block_w, w)
+    np_, kp, wp = _round_up(n, block_n), _round_up(k, block_k), _round_up(w, block_w)
+    t_p = jnp.pad(t_packed, ((0, np_ - n), (0, wp - w)))
+    c_p = jnp.pad(c_packed, ((0, kp - k), (0, wp - w)))
+    len_p = jnp.pad(lengths.astype(jnp.int32), (0, kp - k), constant_values=-1)
+    counts = support_count_packed_pallas(
+        t_p,
+        c_p,
+        len_p,
+        block_n=block_n,
+        block_k=block_k,
+        block_w=block_w,
+        mode=mode,
         interpret=(impl == "pallas_interpret"),
     )
     return counts[:k]

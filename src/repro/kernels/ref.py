@@ -21,16 +21,22 @@ def support_count_ref(t_dense, c_dense, lengths):
     return jnp.sum(contained, axis=0, dtype=jnp.int32)
 
 
-def support_count_packed_ref(t_packed, c_packed, block_k: int = 256):
-    """Bitset/popcount oracle over packed uint32 words (VPU-style path).
+def support_count_packed_ref(t_packed, c_packed, lengths=None, block_k: int = 256):
+    """Bitset oracle over packed uint32 words (VPU-style path).
 
     t_packed: (N, W) uint32, c_packed: (K, W) uint32.
+    lengths:  optional (K,) int32 itemset sizes; rows with ``len = -1`` are
+              padding and never match (same semantics as the dense path).
+              Without lengths, padding rows are encoded as all-ones words.
     Containment: (t & c) == c for every word. Blocked over K to bound memory.
     """
     n, w = t_packed.shape
     k, _ = c_packed.shape
     pad = (-k) % block_k
     c_pad = jnp.pad(c_packed, ((0, pad), (0, 0)), constant_values=jnp.uint32(0xFFFFFFFF))
+    valid = None
+    if lengths is not None:
+        valid = jnp.pad(lengths.astype(jnp.int32), (0, pad), constant_values=-1) >= 0
 
     def one_block(c_blk):
         # (N, 1, W) & (1, bk, W)
@@ -40,6 +46,8 @@ def support_count_packed_ref(t_packed, c_packed, block_k: int = 256):
 
     blocks = c_pad.reshape(-1, block_k, w)
     counts = jax.lax.map(one_block, blocks).reshape(-1)
+    if valid is not None:
+        counts = jnp.where(valid, counts, 0)
     return counts[:k]
 
 

@@ -4,7 +4,20 @@ importing this module never touches jax device state."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+
+def make_auto_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where supported.
+
+    jax >= 0.5 takes ``axis_types``; jax 0.4 has neither ``AxisType`` nor the
+    kwarg (all axes behave as Auto there). The single version-portable mesh
+    entry point for launch scripts, tests and benches.
+    """
+    try:
+        from jax.sharding import AxisType
+    except ImportError:  # jax < 0.5
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -12,9 +25,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     2-pod DCN axis (2,16,16) = 512 chips ("pod","data","model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over host (CPU) devices for tests/benches."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)

@@ -23,6 +23,8 @@ def main():
     ap.add_argument("--min-support", type=float, default=0.02)
     ap.add_argument("--max-k", type=int, default=6)
     ap.add_argument("--impl", default="auto", choices=["auto", "jnp", "pallas", "pallas_interpret"])
+    ap.add_argument("--representation", default="dense", choices=["dense", "packed"],
+                    help="device transaction store: dense int8 or packed uint32 bitsets")
     ap.add_argument("--algo", default="levelwise", choices=["levelwise", "son", "naive_paper"])
     ap.add_argument("--partitions", type=int, default=8, help="SON phase-1 partitions")
     ap.add_argument("--host-devices", type=int, default=0)
@@ -48,9 +50,10 @@ def main():
     mesh = None
     data_axes, model_axis = ("data",), None
     if args.mesh:
+        from repro.launch.mesh import make_auto_mesh
+
         dd, mm = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((dd, mm), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_auto_mesh((dd, mm), ("data", "model"))
         model_axis = "model"
 
     print(f"[mine] generating {args.transactions} transactions x {args.items} items ...")
@@ -60,6 +63,7 @@ def main():
 
     cfg = AprioriConfig(
         min_support=args.min_support, max_k=args.max_k, count_impl=args.impl,
+        representation=args.representation,
         data_axes=data_axes, model_axis=model_axis,
         use_naive_paper_map=(args.algo == "naive_paper"),
     )

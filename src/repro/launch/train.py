@@ -73,8 +73,9 @@ def main():
     rules = ShardingRules()
     if args.mesh:
         dd, mm = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((dd, mm), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_auto_mesh
+
+        mesh = make_auto_mesh((dd, mm), ("data", "model"))
 
     opt_cfg = AdamWConfig(peak_lr=args.lr, warmup_steps=max(5, args.steps // 20),
                           decay_steps=args.steps)

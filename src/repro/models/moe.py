@@ -86,7 +86,9 @@ def moe_apply(p, x, cfg, no_drop: bool = False):
                 # AllReducePromotion pass.
                 return out.reshape(x_local.shape), aux[None]
 
-            fn = _jax.shard_map(
+            from repro.core.mapreduce import shard_map as _shard_map
+
+            fn = _shard_map(
                 body,
                 mesh=mesh,
                 in_specs=(_P(), _P(dp, None, None)),

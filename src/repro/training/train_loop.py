@@ -141,7 +141,9 @@ def make_train_step(
                 )
                 return params, opt, ef_err, {**out_metrics, **opt_metrics}
 
-            shard_fn = jax.shard_map(
+            from repro.core.mapreduce import shard_map
+
+            shard_fn = shard_map(
                 body,
                 mesh=mesh,
                 in_specs=(P(), P(), ef_spec, pod_spec),

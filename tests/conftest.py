@@ -1,5 +1,33 @@
+import os
+
 import numpy as np
 import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def subprocess_env():
+    """Minimal env for subprocess-spawning tests: repo importable via
+    ``PYTHONPATH=src`` (cwd must be REPO_ROOT), and JAX pinned to the CPU
+    platform — without it, children on TPU-image containers try TPU-plugin
+    init and hang for minutes retrying GCP metadata fetches."""
+    return {
+        "PYTHONPATH": "src",
+        "PATH": "/usr/bin:/bin",
+        "HOME": os.environ.get("HOME", "/root"),
+        "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+    }
+
+
+def random_problem(n, i, k, seed=0, density=0.3):
+    """Random (transactions, candidates, lengths) triple for counting tests."""
+    rng = np.random.default_rng(seed)
+    t = (rng.random((n, i)) < density).astype(np.int8)
+    sizes = rng.integers(1, min(6, i) + 1, size=k)
+    cands = np.zeros((k, i), dtype=np.int8)
+    for row, s in enumerate(sizes):
+        cands[row, rng.choice(i, size=s, replace=False)] = 1
+    return t, cands, cands.sum(1).astype(np.int32)
 
 
 @pytest.fixture(scope="session")

@@ -1,6 +1,9 @@
 """Property tests (hypothesis) for the host-side driver: encodings + join."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (see requirements.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 from itertools import combinations

@@ -1,6 +1,7 @@
 """Checkpoint/restart: roundtrip, bit-exact resume, async manager, elastic
 restore onto a different mesh (subprocess with 8 host devices)."""
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -18,6 +19,9 @@ from repro.distributed.checkpoint import (
 )
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_loop import build_train_step, init_train_state
+
+from conftest import REPO_ROOT, subprocess_env
+
 
 
 def test_roundtrip_bit_exact(tmp_path):
@@ -105,8 +109,8 @@ def test_elastic_restore_multidevice():
     proc = subprocess.run(
         [sys.executable, "-c", _ELASTIC],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        cwd="/root/repo",
+        env=subprocess_env(),
+        cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "ELASTIC_OK" in proc.stdout

@@ -12,6 +12,9 @@ import numpy as np
 
 from repro.launch.hlo_analysis import analyze, parse_hlo
 
+from conftest import REPO_ROOT, subprocess_env
+
+
 
 def test_analyzer_counts_scan_trips():
     """XLA cost_analysis counts while bodies once; ours multiplies by trip."""
@@ -66,17 +69,18 @@ _MINI = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs import get_config
     from repro.distributed.sharding import ShardingRules, param_pspecs
     from repro.launch import hlo_analysis
+    from repro.launch.mesh import make_auto_mesh
     from repro.models.shard_ctx import activation_sharding
     from repro.training.optimizer import AdamWConfig
     from repro.training.train_loop import build_train_step
     from repro.launch.specs import params_sds, train_state_sds
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((4, 2), ("data", "model"))
     cfg = get_config("deepseek_coder_33b").reduced(
         d_model=128, num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
         compute_dtype="bfloat16", remat=True)
@@ -114,8 +118,8 @@ def test_mini_dryrun_8dev():
     proc = subprocess.run(
         [sys.executable, "-c", _MINI],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        cwd="/root/repo",
+        env=subprocess_env(),
+        cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "MINI_DRYRUN_OK" in proc.stdout

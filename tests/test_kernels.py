@@ -7,15 +7,7 @@ import pytest
 from repro.kernels import ops, ref
 from repro.core.itemsets import itemsets_to_dense, pack_bits
 
-
-def _random_problem(n, i, k, seed=0, density=0.3):
-    rng = np.random.default_rng(seed)
-    t = (rng.random((n, i)) < density).astype(np.int8)
-    sizes = rng.integers(1, min(6, i) + 1, size=k)
-    cands = np.zeros((k, i), dtype=np.int8)
-    for row, s in enumerate(sizes):
-        cands[row, rng.choice(i, size=s, replace=False)] = 1
-    return t, cands, cands.sum(1).astype(np.int32)
+from conftest import random_problem as _random_problem
 
 
 SHAPES = [
@@ -54,6 +46,29 @@ def test_support_count_packed_vs_dense(seed):
     want = np.asarray(ref.support_count_ref(jnp.asarray(t), jnp.asarray(c), jnp.asarray(lengths)))
     got = np.asarray(
         ref.support_count_packed_ref(jnp.asarray(pack_bits(t)), jnp.asarray(pack_bits(c)), block_k=32)
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("mode", ["and_cmp", "popcount"])
+def test_support_count_packed_pallas_vs_ref(shape, mode):
+    """Packed Pallas kernel (interpret) vs dense oracle, same shape sweep as
+    the dense kernel — includes non-multiple-of-32 item counts."""
+    n, i, k = shape
+    t, c, lengths = _random_problem(n, i, k, seed=n + i + k)
+    want = np.asarray(ref.support_count_ref(jnp.asarray(t), jnp.asarray(c), jnp.asarray(lengths)))
+    got = np.asarray(
+        ops.support_count_packed(
+            jnp.asarray(pack_bits(t)),
+            jnp.asarray(pack_bits(c)),
+            jnp.asarray(lengths),
+            impl="pallas_interpret",
+            mode=mode,
+            block_n=64,
+            block_k=128,
+            block_w=2,
+        )
     )
     np.testing.assert_array_equal(got, want)
 

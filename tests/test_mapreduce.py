@@ -13,6 +13,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.mapreduce import MapReduceJob, mapreduce, pad_rows_to_shards
 
+from conftest import REPO_ROOT, subprocess_env
+
+
 
 def test_mapreduce_single_device_sum():
     mesh = jax.make_mesh((1,), ("data",))
@@ -82,8 +85,8 @@ def test_shard_count_invariance_multidevice():
         capture_output=True,
         text=True,
         timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        cwd="/root/repo",
+        env=subprocess_env(),
+        cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "INVARIANCE_OK" in proc.stdout

@@ -1,6 +1,9 @@
 """Hypothesis property tests on the mining system's invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (see requirements.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

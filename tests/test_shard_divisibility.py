@@ -1,0 +1,83 @@
+"""Regression: the candidate pad bucket must split evenly over P(model_axis).
+
+The seed computed ``quantum = max(candidate_pad, model_shards)`` which is NOT
+a multiple of ``model_shards`` when the shard count is not a power-of-two
+divisor of ``candidate_pad`` (e.g. 3 model shards -> kp = 256 -> uneven
+split, shard_map rejects the spec). ``_candidate_quantum`` now rounds the
+bucket up to a multiple of the model-shard count; ``_pad_bucket`` only
+doubles, which preserves divisibility.
+"""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core.apriori import AprioriConfig, _candidate_quantum, _pad_bucket
+
+from conftest import REPO_ROOT, subprocess_env
+
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+@pytest.mark.parametrize("shards,pad", [(1, 256), (2, 256), (3, 256), (5, 256), (6, 64), (7, 100)])
+def test_candidate_quantum_divisible(shards, pad):
+    cfg = AprioriConfig(candidate_pad=pad, model_axis="model")
+    mesh = _FakeMesh({"data": 2, "model": shards})
+    q = _candidate_quantum(cfg, mesh)
+    assert q >= pad and q % shards == 0
+    # every bucket grown from the quantum stays divisible
+    for k in (1, pad - 1, pad + 1, 10 * pad + 3):
+        assert _pad_bucket(k, q) % shards == 0
+        assert _pad_bucket(k, q) >= k
+
+
+def test_candidate_quantum_no_model_axis():
+    cfg = AprioriConfig(candidate_pad=128, model_axis=None)
+    assert _candidate_quantum(cfg, None) == 128
+
+
+_MESH_2x3 = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+    import jax
+    from repro.core.apriori import AprioriConfig, mine
+    from repro.data.synthetic import QuestConfig, gen_transactions
+
+    db = gen_transactions(QuestConfig(num_transactions=400, num_items=64, avg_len=8, seed=13))
+    single = mine(db, AprioriConfig(min_support=0.05, max_k=4, count_impl="jnp"))
+
+    mesh = jax.make_mesh((2, 3), ("data", "model"))   # 3 model shards: the bug trigger
+    for rep in ("dense", "packed"):
+        dist = mine(
+            db,
+            AprioriConfig(min_support=0.05, max_k=4, count_impl="jnp",
+                          representation=rep, data_axes=("data",), model_axis="model",
+                          candidate_pad=256),
+            mesh=mesh,
+        )
+        assert dist.as_dict() == single.as_dict(), rep
+    print("MESH_2x3_OK", single.total_frequent)
+    """
+)
+
+
+def test_mine_on_2x3_mesh():
+    """Runs in a subprocess with 6 host devices: a (2, 3) data×model mesh
+    mines identically to a single node, for both representations."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_2x3],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env=subprocess_env(),
+        cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MESH_2x3_OK" in proc.stdout
