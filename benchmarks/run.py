@@ -5,7 +5,9 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
   Fig 5  — transactions vs configuration (standalone / pseudo / distributed)
   §4 eqn — η = FHDSC/FHSSC and node-count scaling (1..8 host devices)
 plus the framework's own kernel/driver benches (support-count kernel,
-candidate generation, SON vs level-wise rounds).
+candidate generation, SON vs level-wise rounds) and the rule-serving engine
+(queries/sec of the rule-match kernel path vs per-basket Python matching at
+the 4096-basket x 8192-rule acceptance shape, DESIGN.md §8).
 
 Run: PYTHONPATH=src python -m benchmarks.run  [--quick] [--json out.json]
 
@@ -208,6 +210,73 @@ def bench_son_vs_levelwise(quick=False):
     row("son_two_phase", us_son, "distributed_rounds=2")
 
 
+# ----------------------------------------------------------------- serving ----
+def _synthetic_rulebook(num_rules, num_items, seed=0):
+    """Random rulebook at serving-benchmark scale (1-3 item antecedents,
+    1-2 item consequents, random scores) — mining wouldn't hit an exact R."""
+    from repro.core.itemsets import itemsets_to_packed, packed_words
+    from repro.serving.rulebook import Rulebook
+
+    rng = np.random.default_rng(seed)
+    picks = rng.random((num_rules, num_items)).argpartition(5, axis=1)[:, :5]
+    na = rng.integers(1, 4, num_rules)
+    nc = rng.integers(1, 3, num_rules)
+    w = packed_words(num_items)
+    ante = np.zeros((num_rules, w), np.uint32)
+    cons = np.zeros((num_rules, w), np.uint32)
+    for s in (1, 2, 3):
+        m = na == s
+        ante[m] = itemsets_to_packed(picks[m][:, :s], num_items)
+    for s in (1, 2):
+        m = nc == s
+        cons[m] = itemsets_to_packed(picks[m][:, 3 : 3 + s], num_items)
+    scores = rng.random(num_rules).astype(np.float32)
+    return Rulebook(ante, cons, na.astype(np.int32), scores, num_items)
+
+
+def bench_rule_serving(quick=False):
+    """Rule-match serving engine QPS: kernel path vs per-basket Python.
+
+    Always runs at the acceptance shape (4096 baskets x 8192 rules, 256
+    items) so the BENCH_*.json trajectory tracks the same point; quick mode
+    only drops reps and the Python-baseline subset size (per-basket cost is
+    constant, so its QPS doesn't depend on the subset)."""
+    from repro.core.itemsets import pack_bits
+    from repro.kernels import ops
+    from repro.serving.recommend import recommend, recommend_python, rulebook_as_python
+
+    num_rules, num_items, b_kernel = 8192, 256, 4096
+    rb = _synthetic_rulebook(num_rules, num_items)
+    rng = np.random.default_rng(1)
+    b_packed = pack_bits((rng.random((b_kernel, num_items)) < 0.1).astype(np.int8))
+
+    b_py = 64 if quick else 256
+    decoded = rulebook_as_python(rb)
+    us_py = _time(
+        lambda: recommend_python(rb, b_packed[:b_py], top_k=10, decoded=decoded), reps=1
+    )
+    qps_py = b_py / (us_py / 1e6)
+    row("serve_rulematch_python", us_py,
+        f"qps={qps_py:.0f};baskets={b_py};rules={num_rules}")
+
+    impl = ops.resolve_impl("auto")
+    fn = lambda: recommend(rb, b_packed, top_k=10, batch_size=1024, impl="auto",
+                           block_n=512)   # large-batch serving block
+    us_k = _time(fn, reps=1 if quick else 3)
+    qps_k = b_kernel / (us_k / 1e6)
+    row("serve_rulematch_kernel", us_k,
+        f"impl={impl};qps={qps_k:.0f};baskets={b_kernel};rules={num_rules};"
+        f"speedup_vs_python={qps_k / qps_py:.1f}x")
+
+    # interpret-mode kernel body (semantics validation; wall time not meaningful)
+    us_i = _time(
+        lambda: recommend(rb, b_packed[:256], top_k=10, batch_size=256,
+                          impl="pallas_interpret"),
+        reps=1,
+    )
+    row("serve_rulematch_interpret_256", us_i, "correctness_path")
+
+
 # ---------------------------------------------------------------- roofline ----
 def bench_roofline_from_dryrun(quick=False):
     """Surface the dry-run roofline numbers as bench rows (§Roofline source)."""
@@ -255,6 +324,7 @@ def main() -> None:
     bench_candidate_generation(q)
     bench_son_vs_levelwise(q)
     bench_mine_representations(q)
+    bench_rule_serving(q)
     bench_roofline_from_dryrun(q)
 
     if args.json:

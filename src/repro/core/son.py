@@ -18,6 +18,7 @@ this directly attacks the paper's Fig-4 heterogeneity penalty.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import numpy as np
@@ -26,10 +27,20 @@ from repro.core import apriori as ap
 from repro.core import itemsets as enc
 
 
-def _mine_local(t_np: np.ndarray, min_count: int, max_k: int) -> dict:
-    """Single-partition in-memory Apriori (the phase-1 'mapper')."""
-    cfg = ap.AprioriConfig(min_support=min_count / max(1, t_np.shape[0]), max_k=max_k, count_impl="jnp")
-    res = ap.mine(t_np, cfg, mesh=None)
+def _mine_local(t_np: np.ndarray, min_count: int, cfg: ap.AprioriConfig) -> dict:
+    """Single-partition in-memory Apriori (the phase-1 'mapper').
+
+    Inherits the caller's count/representation config — only the support
+    threshold is rescaled to the partition and the mesh axes dropped (each
+    mapper is single-device), so a packed/Pallas mine runs phase 1 on the
+    packed path too."""
+    local_cfg = dataclasses.replace(
+        cfg,
+        min_support=min_count / max(1, t_np.shape[0]),
+        data_axes=("data",),
+        model_axis=None,
+    )
+    res = ap.mine(t_np, local_cfg, mesh=None)
     return res.levels
 
 
@@ -51,7 +62,7 @@ def mine_son(
         if part.shape[0] == 0:
             continue
         local_min = max(1, math.ceil(cfg.min_support * part.shape[0]))
-        for k, (sets, _) in _mine_local(part, local_min, cfg.max_k).items():
+        for k, (sets, _) in _mine_local(part, local_min, cfg).items():
             union.setdefault(k, set()).update(tuple(int(x) for x in row) for row in sets)
 
     # ---- phase 2: one exact global count of the union (the same encode +

@@ -162,6 +162,80 @@ def support_count_packed(
     return counts[:k]
 
 
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def _rule_match_jnp_blocked(b_packed, a_packed, lengths, c_packed, scores, block_n=512):
+    """Basket-blocked oracle dispatch: bounds the (bn, R, W) broadcast the
+    plain reference materializes, so the jnp path serves large batches
+    without an O(B·R·W) intermediate."""
+    n, w = b_packed.shape
+    pad = (-n) % block_n
+    b_p = jnp.pad(b_packed, ((0, pad), (0, 0)))  # zero baskets match nothing real
+
+    def one_block(b_blk):
+        return ref.rule_match_ref(b_blk, a_packed, lengths, c_packed, scores)
+
+    out = jax.lax.map(one_block, b_p.reshape(-1, block_n, w))
+    return out.reshape(-1, 32 * w)[:n]
+
+
+def rule_match(
+    b_packed,
+    a_packed,
+    lengths,
+    c_packed,
+    scores,
+    *,
+    num_items: int | None = None,
+    impl: str = "auto",
+    block_n: int = 256,
+    block_k: int = 256,
+):
+    """Per-item rule-evidence scores for a batch of basket bitsets.
+
+    b_packed: (B, W) uint32; a_packed/c_packed: (R, W) uint32 rulebook
+    columns; lengths: (R,) int32 antecedent sizes (-1 = padding row);
+    scores: (R,) float32.  Returns (B, num_items or 32·W) float32 where
+    ``out[b, i] = Σ_r [antecedent_r ⊆ basket_b] · scores[r] · consequent_r[i]``.
+    Accepts arbitrary (B, R); pads to kernel block multiples internally
+    (zero basket rows / zero rule rows with len = -1 and score 0 — inert).
+    impl: auto | jnp | pallas | pallas_interpret
+    """
+    impl = resolve_impl(impl)
+    n, w = b_packed.shape
+    r = a_packed.shape[0]
+    assert a_packed.shape == (r, w) and c_packed.shape == (r, w), (
+        "basket and rulebook word counts must agree"
+    )
+    items = 32 * w if num_items is None else num_items
+    if impl == "jnp":
+        # honor the caller's basket block, capped at the (padded) batch so
+        # small batches don't broadcast/matmul against a full default block
+        bn = min(max(block_n, 8), _round_up(n, 8))
+        out = _rule_match_jnp_blocked(
+            b_packed, a_packed, lengths, c_packed, scores, block_n=bn
+        )
+        return out[:, :items]
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown rule_match impl {impl!r}")
+
+    block_n = min(block_n, _round_up(n, 8))
+    block_k = min(block_k, _round_up(r, 128))
+    np_, rp = _round_up(n, block_n), _round_up(r, block_k)
+    b_p = jnp.pad(b_packed, ((0, np_ - n), (0, 0)))
+    a_p = jnp.pad(a_packed, ((0, rp - r), (0, 0)))
+    c_p = jnp.pad(c_packed, ((0, rp - r), (0, 0)))
+    len_p = jnp.pad(lengths.astype(jnp.int32), (0, rp - r), constant_values=-1)
+    score_p = jnp.pad(scores.astype(jnp.float32), (0, rp - r))
+    from repro.kernels.rule_match import rule_match_pallas
+
+    out = rule_match_pallas(
+        b_p, a_p, len_p, c_p, score_p,
+        block_n=block_n, block_k=block_k,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return out[:n, :items]
+
+
 def flash_attention(q, k, v, *, causal: bool = True, impl: str = "auto", block_q: int = 512, block_k: int = 512):
     """Dispatch for attention: Pallas flash kernel on TPU, chunked jnp otherwise."""
     impl = resolve_impl(impl)

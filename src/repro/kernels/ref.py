@@ -51,6 +51,34 @@ def support_count_packed_ref(t_packed, c_packed, lengths=None, block_k: int = 25
     return counts[:k]
 
 
+def unpack_bits_ref(packed, num_items: int):
+    """Packed uint32 (R, W) -> dense {0,1} float32 (R, num_items) — jnp twin
+    of ``core.itemsets.unpack_bits`` (little-endian bits per word)."""
+    r, w = packed.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(r, w * 32)[:, :num_items].astype(jnp.float32)
+
+
+def rule_match_ref(b_packed, a_packed, lengths, c_packed, scores):
+    """Per-item rule-evidence scores — oracle for ``kernels/rule_match.py``.
+
+    b_packed: (B, W) uint32 basket bitsets
+    a_packed: (R, W) uint32 antecedent bitsets
+    lengths:  (R,)   int32  antecedent sizes (-1 = padding row, never matches)
+    c_packed: (R, W) uint32 consequent bitsets
+    scores:   (R,)   float32 rule weights
+    returns:  (B, 32·W) float32 — out[b, i] = Σ_r [a_r ⊆ basket_b] · s_r · c_r[i]
+    """
+    contains = jnp.all(
+        (b_packed[:, None, :] & a_packed[None, :, :]) == a_packed[None, :, :], axis=-1
+    )  # (B, R)
+    matched = contains & (lengths.astype(jnp.int32) >= 0)[None, :]
+    weights = matched.astype(jnp.float32) * scores.astype(jnp.float32)[None, :]
+    cons_dense = unpack_bits_ref(c_packed, 32 * c_packed.shape[1])  # (R, 32·W)
+    return weights @ cons_dense
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
     """Reference attention (fp32 softmax), GQA-aware.
 

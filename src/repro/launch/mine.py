@@ -4,6 +4,13 @@
       --min-support 0.02 --max-k 5
   # multi-device (the paper's multi-node mode):
   PYTHONPATH=src python -m repro.launch.mine --host-devices 8 --mesh 4x2 ...
+  # mine AND emit a servable rulebook artifact (serving/rulebook.py):
+  PYTHONPATH=src python -m repro.launch.mine ... --rulebook rb.npz \
+      --min-confidence 0.6 --rule-score confidence --max-rules 8192
+
+``--rulebook PATH`` compiles the mined itemsets into the packed-bitset rule
+columns the Pallas rule-match serving engine consumes (DESIGN.md §8) and
+saves them as one ``.npz``; serve it with ``examples/serve_rules.py``.
 """
 
 from __future__ import annotations
@@ -32,6 +39,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rules", action="store_true", help="extract association rules")
     ap.add_argument("--min-confidence", type=float, default=0.6)
+    ap.add_argument("--rulebook", default="", metavar="PATH",
+                    help="compile + save a servable rulebook artifact (.npz)")
+    ap.add_argument("--rule-score", default="confidence", choices=["confidence", "lift"],
+                    help="rulebook serving score column")
+    ap.add_argument("--max-rules", type=int, default=None,
+                    help="truncate the rulebook to the top-scoring rules")
     ap.add_argument("--ckpt", default="", help="mining checkpoint dir (resume per level)")
     args = ap.parse_args()
 
@@ -115,6 +128,17 @@ def main():
         for r in rules:
             print(f"  {r.antecedent} -> {r.consequent}  conf={r.confidence:.3f} "
                   f"supp={r.support:.4f} lift={r.lift:.2f}")
+    if args.rulebook:
+        from repro.serving.rulebook import compile_rulebook
+
+        rb = compile_rulebook(
+            res, min_confidence=args.min_confidence, score=args.rule_score,
+            max_rules=args.max_rules, num_items=args.items,
+        )
+        rb.save(args.rulebook)
+        print(f"[rulebook] {rb.num_rules} rules ({rb.num_rows} padded rows, "
+              f"score={rb.score_kind}) -> {args.rulebook}")
+
     print(json.dumps({"seconds": dt, "total_frequent": res.total_frequent,
                       "levels": {k: int(v[0].shape[0]) for k, v in res.levels.items()}}))
 

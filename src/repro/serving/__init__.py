@@ -1,1 +1,9 @@
 from repro.serving.serve_loop import make_prefill_step, make_decode_step, generate
+from repro.serving.rulebook import Rulebook, compile_rulebook, place_rulebook
+from repro.serving.recommend import (
+    RecommendResult,
+    make_match_step,
+    pack_baskets,
+    recommend,
+    recommend_python,
+)

@@ -34,6 +34,24 @@ def test_son_equals_levelwise(small_db):
     assert mine_son(small_db, cfg, num_partitions=5).as_dict() == mine(small_db, cfg).as_dict()
 
 
+def test_son_honors_representation_and_impl(small_db):
+    """SON phase 1 must inherit cfg's count path (regression: it used to
+    hardcode count_impl='jnp'): the packed representation and a Pallas
+    interpret impl both flow through local mining unchanged."""
+    base = mine_son(
+        small_db, AprioriConfig(min_support=0.08, max_k=4, count_impl="jnp"), num_partitions=3
+    )
+    packed = mine_son(
+        small_db,
+        AprioriConfig(
+            min_support=0.08, max_k=4, count_impl="pallas_interpret",
+            representation="packed", candidate_pad=128,
+        ),
+        num_partitions=3,
+    )
+    assert base.as_dict() == packed.as_dict()
+
+
 def test_min_count_semantics(small_db):
     n = small_db.shape[0]
     cfg = AprioriConfig(min_support=0.1, max_k=2, count_impl="jnp")

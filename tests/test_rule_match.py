@@ -1,0 +1,115 @@
+"""Rule-match kernel: Pallas (interpret) vs jnp oracle parity, padding
+invariants (all-padding rulebooks, zero baskets, non-multiple-of-32 item
+counts), and dispatch equivalence — the CI parity gate."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.itemsets import itemsets_to_packed, pack_bits, packed_words
+from repro.kernels import ops, ref
+
+
+def random_rule_problem(b, i, r, seed=0, pad_frac=0.2, density=0.3):
+    """Random (baskets, antecedents, lengths, consequents, scores) with a
+    sprinkle of padding rows (zero words, len = -1, score 0)."""
+    rng = np.random.default_rng(seed)
+    w = packed_words(i)
+    baskets = pack_bits((rng.random((b, i)) < density).astype(np.int8))
+    na = rng.integers(1, min(4, i) + 1, r)
+    nc = rng.integers(1, min(3, i) + 1, r)
+    ante = np.zeros((r, w), np.uint32)
+    cons = np.zeros((r, w), np.uint32)
+    for row in range(r):
+        ante[row] = itemsets_to_packed(
+            np.sort(rng.choice(i, na[row], replace=False))[None], i
+        )
+        cons[row] = itemsets_to_packed(
+            np.sort(rng.choice(i, nc[row], replace=False))[None], i
+        )
+    lengths = na.astype(np.int32)
+    scores = rng.random(r).astype(np.float32)
+    if pad_frac:
+        pad = rng.choice(r, max(1, int(r * pad_frac)), replace=False)
+        ante[pad] = 0
+        cons[pad] = 0
+        lengths[pad] = -1
+        scores[pad] = 0
+    return baskets, ante, lengths, cons, scores
+
+
+RULE_SHAPES = [
+    (8, 16, 4),       # tiny
+    (100, 37, 33),    # I not a multiple of 32
+    (64, 96, 300),    # word-aligned I, R spans blocks
+    (33, 130, 257),   # multi-word, ragged everywhere
+    (16, 31, 128),    # single partial word
+]
+
+
+@pytest.mark.parametrize("shape", RULE_SHAPES)
+def test_rule_match_kernel_matches_ref(shape):
+    b, i, r = shape
+    args = [jnp.asarray(x) for x in random_rule_problem(b, i, r, seed=sum(shape))]
+    want = np.asarray(ref.rule_match_ref(*args))[:, :i]
+    got_jnp = np.asarray(ops.rule_match(*args, num_items=i, impl="jnp"))
+    got_pal = np.asarray(
+        ops.rule_match(*args, num_items=i, impl="pallas_interpret", block_n=32, block_k=128)
+    )
+    np.testing.assert_allclose(got_jnp, want, rtol=1e-6)
+    np.testing.assert_allclose(got_pal, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_rule_match_all_padding_rules(impl):
+    """A rulebook that is ALL padding rows (len = -1, zero words) must score
+    zero everywhere — padded rules can never match any basket."""
+    baskets, *_ = random_rule_problem(20, 64, 4, seed=9, pad_frac=0)
+    r, w = 12, packed_words(64)
+    z = jnp.zeros((r, w), jnp.uint32)
+    out = ops.rule_match(
+        jnp.asarray(baskets), z, jnp.full(r, -1, jnp.int32), z,
+        jnp.zeros(r, jnp.float32), num_items=64, impl=impl,
+    )
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_rule_match_zero_baskets_score_zero():
+    """Zero basket rows (batch padding) match no real antecedent."""
+    _, ante, lengths, cons, scores = random_rule_problem(4, 48, 40, seed=5, pad_frac=0)
+    z = jnp.zeros((8, packed_words(48)), jnp.uint32)
+    out = ops.rule_match(
+        z, jnp.asarray(ante), jnp.asarray(lengths), jnp.asarray(cons),
+        jnp.asarray(scores), num_items=48, impl="pallas_interpret",
+    )
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_rule_match_exact_containment_semantics():
+    """Hand-built case: out[b] sums scores of exactly the contained rules."""
+    i = 40
+    baskets = pack_bits(
+        np.asarray(
+            [
+                [1 if x in (0, 1, 35) else 0 for x in range(i)],
+                [1 if x in (2,) else 0 for x in range(i)],
+            ],
+            np.int8,
+        )
+    )
+    # rule 0: {0,35} -> {2} (matches basket 0); rule 1: {2} -> {0} (matches 1)
+    ante = itemsets_to_packed(np.array([[0, 35], [2, 2]], np.int32), i)
+    cons = itemsets_to_packed(np.array([[2, 2], [0, 0]], np.int32), i)
+    lengths = np.array([2, 1], np.int32)
+    scores = np.array([0.5, 2.0], np.float32)
+    for impl in ("jnp", "pallas_interpret"):
+        out = np.asarray(
+            ops.rule_match(
+                jnp.asarray(baskets), jnp.asarray(ante), jnp.asarray(lengths),
+                jnp.asarray(cons), jnp.asarray(scores), num_items=i, impl=impl,
+            )
+        )
+        want = np.zeros((2, i), np.float32)
+        want[0, 2] = 0.5
+        want[1, 0] = 2.0
+        np.testing.assert_array_equal(out, want)

@@ -1,0 +1,181 @@
+"""Serving subsystem: rulebook compile/save/load, batched recommend vs the
+per-basket Python engine, the served-rule frequency property, and the mesh
+(Map/Reduce) match step."""
+
+import numpy as np
+import pytest
+
+from repro.core.apriori import AprioriConfig, mine
+from repro.data.synthetic import QuestConfig, gen_transactions
+from repro.serving import (
+    Rulebook,
+    compile_rulebook,
+    pack_baskets,
+    place_rulebook,
+    recommend,
+    recommend_python,
+)
+from repro.serving.recommend import rulebook_as_python
+
+
+@pytest.fixture(scope="module")
+def mined():
+    db = gen_transactions(
+        QuestConfig(num_transactions=400, num_items=40, avg_len=8, seed=3)
+    )
+    res = mine(db, AprioriConfig(min_support=0.04, max_k=4, count_impl="jnp"))
+    return db, res
+
+
+@pytest.fixture(scope="module")
+def rulebook(mined):
+    _, res = mined
+    return compile_rulebook(res, min_confidence=0.4, num_items=40, pad_multiple=64)
+
+
+# ------------------------------------------------------------- compile -------
+def test_compile_layout_and_padding(rulebook):
+    rb = rulebook
+    assert rb.ante_packed.dtype == np.uint32 and rb.scores.dtype == np.float32
+    assert rb.num_rows % 64 == 0 and rb.num_rules <= rb.num_rows
+    pad = np.asarray(rb.ante_len) < 0
+    assert not np.any(np.asarray(rb.ante_packed)[pad])          # zero words
+    assert not np.any(np.asarray(rb.scores)[pad])               # zero scores
+    real = np.asarray(rb.scores)[~pad]
+    assert (np.diff(real) <= 1e-7).all()                        # sorted descending
+
+
+def test_compile_max_rules_truncates_top_scores(mined):
+    _, res = mined
+    full = compile_rulebook(res, min_confidence=0.4, num_items=40, pad_multiple=1)
+    trunc = compile_rulebook(
+        res, min_confidence=0.4, num_items=40, max_rules=10, pad_multiple=1
+    )
+    assert trunc.num_rules == 10
+    np.testing.assert_array_equal(trunc.scores[:10], full.scores[:10])
+
+
+def test_compile_rejects_unknown_score(mined):
+    _, res = mined
+    with pytest.raises(ValueError):
+        compile_rulebook(res, score="support")
+
+
+def test_save_load_roundtrip(rulebook, tmp_path):
+    path = str(tmp_path / "rb.npz")
+    rulebook.save(path)
+    rb2 = Rulebook.load(path)
+    for field in ("ante_packed", "cons_packed", "ante_len", "scores"):
+        np.testing.assert_array_equal(getattr(rulebook, field), getattr(rb2, field))
+    assert (rb2.num_items, rb2.score_kind, rb2.min_confidence) == (40, "confidence", 0.4)
+
+
+# ------------------------------------------------- served-rule property ------
+def test_every_served_rule_union_is_frequent(mined, rulebook):
+    """Property: every rule resident in the compiled rulebook came from a
+    frequent itemset — antecedent ∪ consequent has support >= min_count."""
+    _, res = mined
+    rules = rulebook_as_python(rulebook)
+    assert len(rules) == rulebook.num_rules > 0
+    for ante, cons, _ in rules:
+        union = tuple(sorted(ante | set(cons.tolist())))
+        assert res.support(union) >= res.min_count
+
+
+# ----------------------------------------------------------- recommend -------
+def test_recommend_matches_python_engine(mined, rulebook):
+    db, _ = mined
+    baskets = db[:60]
+    out_py = recommend_python(rulebook, baskets, top_k=5)
+    for impl in ("jnp", "pallas_interpret"):
+        out = recommend(rulebook, baskets, top_k=5, batch_size=32, impl=impl)
+        np.testing.assert_allclose(out.scores, out_py.scores, rtol=1e-4, atol=1e-5)
+        # identical item ranking wherever scores are distinct
+        distinct = np.abs(np.diff(out_py.scores, axis=1)).min(axis=1) > 1e-5
+        np.testing.assert_array_equal(out.items[distinct], out_py.items[distinct])
+
+
+def test_recommend_excludes_basket_items(mined, rulebook):
+    db, _ = mined
+    out = recommend(rulebook, db[:40], top_k=5, batch_size=16, impl="jnp")
+    for b in range(40):
+        have = set(np.flatnonzero(db[b]).tolist())
+        recs = set(out.items[b][np.isfinite(out.scores[b])].tolist())
+        assert not (have & recs)
+
+
+def test_recommend_accepts_lists_and_packed(mined, rulebook):
+    db, _ = mined
+    lists = [np.flatnonzero(row).tolist() for row in db[:20]]
+    packed = pack_baskets(lists, rulebook.num_items)
+    out_l = recommend(rulebook, lists, top_k=4, batch_size=8, impl="jnp")
+    out_p = recommend(rulebook, packed, top_k=4, batch_size=8, impl="jnp")
+    np.testing.assert_array_equal(out_l.items, out_p.items)
+    np.testing.assert_array_equal(out_l.scores, out_p.scores)
+
+
+def test_recommend_on_mesh_matches_single_device(mined, rulebook):
+    """The Map/Reduce match step (rules psum'd over the model axis)."""
+    from repro.launch.mesh import make_auto_mesh
+
+    db, _ = mined
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
+    placed = place_rulebook(rulebook, mesh, rule_axis="model")
+    out_m = recommend(rulebook, db[:30], top_k=5, batch_size=16, impl="jnp", mesh=mesh)
+    out_s = recommend(rulebook, db[:30], top_k=5, batch_size=16, impl="jnp")
+    np.testing.assert_allclose(out_m.scores, out_s.scores, rtol=1e-5, atol=1e-6)
+    assert placed.num_rules == rulebook.num_rules
+
+
+_SERVE_2x3 = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+import numpy as np
+from repro.core.apriori import AprioriConfig, mine
+from repro.data.synthetic import QuestConfig, gen_transactions
+from repro.launch.mesh import make_auto_mesh
+from repro.serving import compile_rulebook, place_rulebook, recommend, recommend_python
+
+db = gen_transactions(QuestConfig(num_transactions=400, num_items=64, avg_len=8, seed=13))
+res = mine(db, AprioriConfig(min_support=0.04, max_k=4, count_impl="jnp"))
+rb = compile_rulebook(res, min_confidence=0.4, num_items=64, pad_multiple=64)
+
+mesh = make_auto_mesh((2, 3), ("data", "model"))  # 3 rule shards: uneven-split trigger
+placed = place_rulebook(rb, mesh, rule_axis="model")
+assert placed.num_rows % 3 == 0 and placed.num_rules == rb.num_rules
+out_m = recommend(placed, db[:90], top_k=5, batch_size=30, impl="jnp", mesh=mesh)
+out_p = recommend_python(rb, db[:90], top_k=5)
+np.testing.assert_allclose(out_m.scores, out_p.scores, rtol=1e-4, atol=1e-5)
+distinct = np.abs(np.diff(out_p.scores, axis=1)).min(axis=1) > 1e-5
+np.testing.assert_array_equal(out_m.items[distinct], out_p.items[distinct])
+print("SERVE_2x3_OK", rb.num_rules)
+"""
+
+
+def test_recommend_on_real_2x3_mesh():
+    """Runs in a subprocess with 6 host devices: the psum-over-rule-shards
+    Map/Reduce branch (not the single-device shortcut) must reproduce the
+    Python oracle, with the rulebook split unevenly over 3 model shards."""
+    import subprocess
+    import sys
+
+    from conftest import REPO_ROOT, subprocess_env
+
+    proc = subprocess.run(
+        [sys.executable, "-c", _SERVE_2x3],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env=subprocess_env(),
+        cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SERVE_2x3_OK" in proc.stdout
+
+
+def test_empty_rulebook_recommends_nothing(mined):
+    db, res = mined
+    rb = compile_rulebook(res, min_confidence=1.1, num_items=40, pad_multiple=32)
+    assert rb.num_rules == 0
+    out = recommend(rb, db[:8], top_k=3, batch_size=8, impl="jnp")
+    assert np.all(out.scores <= 0)  # only -inf (basket) or 0 (no evidence)

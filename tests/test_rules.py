@@ -1,0 +1,116 @@
+"""Rule extraction: vectorized-vs-naive parity, hand-checked statistics,
+missing-support (lift=NaN regression) handling, deterministic ordering, and
+the frequency property of every extracted rule."""
+
+import numpy as np
+import pytest
+
+from repro.core.apriori import AprioriConfig, AprioriResult, mine
+from repro.core.itemsets import dense_from_lists
+from repro.core.rules import (
+    extract_rule_arrays,
+    extract_rules,
+    extract_rules_vectorized,
+)
+from repro.data.synthetic import QuestConfig, gen_transactions
+
+
+def _rule_dict(rules):
+    return {(r.antecedent, r.consequent): (r.support, r.confidence, r.lift) for r in rules}
+
+
+# ------------------------------------------------------------- parity --------
+@pytest.mark.parametrize("seed,min_conf", [(0, 0.0), (0, 0.5), (1, 0.6), (2, 0.0), (3, 0.45)])
+def test_vectorized_matches_naive_random_corpora(seed, min_conf):
+    db = gen_transactions(
+        QuestConfig(num_transactions=250, num_items=28, avg_len=6, seed=seed)
+    )
+    res = mine(db, AprioriConfig(min_support=0.05, max_k=4, count_impl="jnp"))
+    # bit-identical: same splits selected, same f64 statistics, same order
+    assert extract_rules(res, min_conf) == extract_rules_vectorized(res, min_conf)
+
+
+def test_vectorized_max_rules_prefix_matches_naive(small_db):
+    res = mine(small_db, AprioriConfig(min_support=0.08, max_k=4, count_impl="jnp"))
+    full = extract_rules_vectorized(res, 0.5)
+    assert extract_rules_vectorized(res, 0.5, max_rules=7) == full[:7]
+    assert extract_rules(res, 0.5, max_rules=7) == full[:7]
+
+
+# ------------------------------------------------------ hand-checked ---------
+def test_hand_checked_confidence_and_lift():
+    """8 transactions over 3 items with hand-countable supports:
+      s({0}) = 4, s({1}) = 6, s({2}) = 3, s({0,1}) = 3, s({1,2}) = 2."""
+    baskets = [[0, 1], [0, 1], [0, 1], [0], [1, 2], [1, 2], [1], [2]]
+    db = dense_from_lists(baskets, 3)
+    res = mine(db, AprioriConfig(min_support=0.2, max_k=2, count_impl="jnp"))
+    assert res.support((0, 1)) == 3 and res.support((1, 2)) == 2
+
+    for extract in (extract_rules, extract_rules_vectorized):
+        by_key = _rule_dict(extract(res, min_confidence=0.0))
+        assert by_key[((0,), (1,))] == (3 / 8, 3 / 4, 1.0)   # exact in both paths
+        assert by_key[((1,), (0,))] == pytest.approx((3 / 8, 1 / 2, 1.0), rel=1e-6)
+        assert by_key[((2,), (1,))] == pytest.approx((2 / 8, 2 / 3, 8 / 9), rel=1e-6)
+        assert by_key[((1,), (2,))] == pytest.approx((2 / 8, 1 / 3, 8 / 9), rel=1e-6)
+
+
+# --------------------------------------- missing supports (NaN regression) ---
+def _truncated_result():
+    """A partial AprioriResult: {0,1} frequent but s({1}) absent (e.g. a
+    filtered resume checkpoint) — lift of {0}->{1} is undefined."""
+    levels = {
+        1: (np.array([[0]], np.int32), np.array([7], np.int64)),
+        2: (np.array([[0, 1]], np.int32), np.array([5], np.int64)),
+    }
+    return AprioriResult(levels=levels, num_transactions=10, min_count=2)
+
+
+def test_missing_consequent_support_is_skipped_not_nan():
+    res = _truncated_result()
+    for extract in (extract_rules, extract_rules_vectorized):
+        rules = extract(res, min_confidence=0.0)
+        # {0}->{1}: consequent support missing; {1}->{0}: antecedent missing
+        assert rules == []
+        assert not any(np.isnan(r.lift) for r in rules)
+
+
+def test_sort_is_deterministic_with_itemset_tiebreak():
+    """Two rules with identical (confidence, support) order by itemset."""
+    baskets = [[0, 1], [0, 1], [2, 3], [2, 3], [4]]
+    db = dense_from_lists(baskets, 5)
+    res = mine(db, AprioriConfig(min_support=0.2, max_k=2, count_impl="jnp"))
+    for extract in (extract_rules, extract_rules_vectorized):
+        rules = extract(res, min_confidence=0.0)
+        keys = [(-r.confidence, -r.support, r.antecedent, r.consequent) for r in rules]
+        assert keys == sorted(keys)
+        pairs = [(r.antecedent, r.consequent) for r in rules]
+        assert pairs.index(((0,), (1,))) < pairs.index(((2,), (3,)))
+
+
+# ----------------------------------------------------- frequency property ----
+def test_every_rule_union_is_frequent(small_db):
+    """Property: A ∪ C of every extracted rule is itself a mined frequent
+    itemset with support >= min_count (both extraction paths)."""
+    res = mine(small_db, AprioriConfig(min_support=0.08, max_k=4, count_impl="jnp"))
+    for extract in (extract_rules, extract_rules_vectorized):
+        rules = extract(res, min_confidence=0.3)
+        assert rules
+        for r in rules:
+            union = tuple(sorted(r.antecedent + r.consequent))
+            assert res.support(union) >= res.min_count
+            assert not set(r.antecedent) & set(r.consequent)
+
+
+def test_rule_arrays_packed_layout(small_db):
+    """RuleArrays bitsets round-trip through the packed word layout."""
+    from repro.core.itemsets import unpack_bits
+
+    res = mine(small_db, AprioriConfig(min_support=0.08, max_k=4, count_impl="jnp"))
+    arr = extract_rule_arrays(res, 0.5)
+    assert arr.ante_packed.dtype == np.uint32
+    assert arr.ante_packed.shape == arr.cons_packed.shape
+    assert arr.num_rules == arr.ante_len.shape[0]
+    ante_dense = unpack_bits(arr.ante_packed, arr.num_items)
+    np.testing.assert_array_equal(ante_dense.sum(1).astype(np.int32), arr.ante_len)
+    # antecedent and consequent are disjoint bitsets
+    assert not np.any(arr.ante_packed & arr.cons_packed)
