@@ -309,6 +309,70 @@ def bench_mine_representations(quick=False):
         f"transactions={n};speedup_vs_dense={us_dense/us_packed:.2f}x")
 
 
+# ------------------------------------------------------------- out-of-core ----
+_OOC_SCRIPT = r"""
+import os, sys, json, time, resource, tempfile, shutil
+mode, n, items, chunk = sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4])
+import jax  # noqa: F401  (import before measuring: exclude the runtime arena)
+from repro.core.apriori import AprioriConfig, mine
+from repro.data.synthetic import QuestConfig, gen_transactions
+qcfg = QuestConfig(num_transactions=n, num_items=items, avg_len=10, seed=5)
+cfg = AprioriConfig(min_support=0.02, max_k=3, count_impl="jnp", representation="packed")
+rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+t0 = time.time()
+if mode == "inmem":
+    db = gen_transactions(qcfg)              # the dense materialization
+    res = mine(db, cfg)
+else:
+    from repro.core.streaming import mine_streamed
+    from repro.data.store import ingest_quest
+    d = tempfile.mkdtemp(prefix="bench_store_")
+    try:
+        store = ingest_quest(qcfg, d, shard_rows=chunk, chunk_rows=chunk)
+        res = mine_streamed(store, cfg, chunk_rows=chunk)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+dt = time.time() - t0
+rss1 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+print(json.dumps({"seconds": dt, "peak_rss_delta_mb": (rss1 - rss0) / 1024.0,
+                  "frequent": res.total_frequent}))
+"""
+
+
+def bench_out_of_core(quick=False):
+    """Streamed vs in-memory mining: wall time AND peak host RSS (§9).
+
+    One subprocess per mode so ``ru_maxrss`` (a process-lifetime high-water
+    mark) isolates each driver's own peak. The shape is FIXED (60000 x 1024,
+    chunk 2048) in quick mode too, so the BENCH_*.json trajectory and the CI
+    RSS gate always compare the same point: the in-memory driver must
+    materialize the 60 MB dense matrix; the streamed driver's working set is
+    the 2048-row chunk (~0.3 MB packed) + candidate tensors.
+    """
+    n, items, chunk = 60_000, 1024, 2_048
+    outs = {}
+    for mode in ("inmem", "stream"):
+        proc = subprocess.run(
+            [sys.executable, "-c", _OOC_SCRIPT, mode, str(n), str(items), str(chunk)],
+            capture_output=True, text=True, timeout=1800,
+            env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+                 "HOME": os.environ.get("HOME", "/root"),
+                 "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
+        )
+        if proc.returncode != 0:
+            row(f"ooc_mine_{mode}_n{n}", -1, "FAILED")
+            return
+        outs[mode] = json.loads(proc.stdout.strip().splitlines()[-1])
+    inmem, stream = outs["inmem"], outs["stream"]
+    assert inmem["frequent"] == stream["frequent"], "streamed result drifted"
+    row(f"ooc_mine_inmem_n{n}", inmem["seconds"] * 1e6,
+        f"peak_rss_mb={inmem['peak_rss_delta_mb']:.1f};frequent={inmem['frequent']}")
+    row(f"ooc_mine_streamed_n{n}", stream["seconds"] * 1e6,
+        f"peak_rss_mb={stream['peak_rss_delta_mb']:.1f};chunk_rows={chunk};"
+        f"rss_vs_inmem={stream['peak_rss_delta_mb']/max(inmem['peak_rss_delta_mb'],1e-9):.2f}x;"
+        f"frequent={stream['frequent']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -324,6 +388,7 @@ def main() -> None:
     bench_candidate_generation(q)
     bench_son_vs_levelwise(q)
     bench_mine_representations(q)
+    bench_out_of_core(q)
     bench_rule_serving(q)
     bench_roofline_from_dryrun(q)
 

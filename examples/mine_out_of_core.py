@@ -1,0 +1,94 @@
+"""Out-of-core mining walkthrough: ingest a Quest DB into an on-disk
+partitioned store (chunked — the dense matrix is never materialized), then
+mine it with the streaming Map/Reduce driver and verify bit-identical
+results against the in-memory miner, reporting peak host RSS for both.
+
+python examples/mine_out_of_core.py [--transactions N] [--items I]
+                                    [--chunk-rows C] [--min-support S]
+
+Exits non-zero if streamed and in-memory results differ — CI runs this as
+the out-of-core smoke (DESIGN.md §9).
+"""
+
+import argparse
+import os
+import resource
+import shutil
+import tempfile
+import time
+
+
+def rss_mb() -> float:
+    """Peak RSS of this process so far, in MB (ru_maxrss is KB on Linux)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--transactions", type=int, default=30_000)
+    ap.add_argument("--items", type=int, default=256)
+    ap.add_argument("--chunk-rows", type=int, default=2048)
+    ap.add_argument("--shard-rows", type=int, default=4096)
+    ap.add_argument("--min-support", type=float, default=0.02)
+    ap.add_argument("--max-k", type=int, default=4)
+    ap.add_argument("--keep-store", default="", metavar="DIR",
+                    help="ingest here and keep it (default: temp dir, removed)")
+    args = ap.parse_args()
+
+    from repro.core.apriori import AprioriConfig, mine
+    from repro.core.streaming import mine_son_streamed, mine_streamed
+    from repro.data.store import ingest_quest
+    from repro.data.synthetic import QuestConfig, gen_transactions
+
+    qcfg = QuestConfig(num_transactions=args.transactions, num_items=args.items,
+                       avg_len=10, seed=7)
+    cfg = AprioriConfig(min_support=args.min_support, max_k=args.max_k,
+                        count_impl="jnp", representation="packed")
+
+    store_dir = args.keep_store or tempfile.mkdtemp(prefix="quest_store_")
+    try:
+        # --- 1. chunked ingest: generator -> packed shards on disk ---------
+        t0 = time.time()
+        store = ingest_quest(qcfg, store_dir, shard_rows=args.shard_rows,
+                             chunk_rows=args.chunk_rows)
+        disk_mb = sum(
+            os.path.getsize(os.path.join(store_dir, f)) for f in os.listdir(store_dir)
+        ) / 1e6
+        print(f"ingest: {time.time()-t0:.2f}s -> {store.num_partitions} shards, "
+              f"{disk_mb:.1f} MB on disk "
+              f"(dense would be {args.transactions*args.items/1e6:.1f} MB in RAM)")
+
+        # --- 2. streamed mine: host RAM bounded by chunk_rows --------------
+        rss_before = rss_mb()
+        t0 = time.time()
+        streamed = mine_streamed(store, cfg, chunk_rows=args.chunk_rows)
+        print(f"mine_streamed: {time.time()-t0:.2f}s, "
+              f"{streamed.total_frequent} itemsets, "
+              f"peak RSS delta {rss_mb()-rss_before:.1f} MB "
+              f"(chunk = {args.chunk_rows} rows)")
+
+        # --- 3. streamed SON: 2 rounds, shards as partitions ----------------
+        t0 = time.time()
+        son = mine_son_streamed(store, cfg, chunk_rows=args.chunk_rows)
+        print(f"mine_son_streamed: {time.time()-t0:.2f}s, {son.total_frequent} itemsets")
+
+        # --- 4. in-memory reference: the dense-materialization baseline ----
+        t0 = time.time()
+        db = gen_transactions(qcfg)
+        inmem = mine(db, cfg)
+        print(f"in-memory mine: {time.time()-t0:.2f}s "
+              f"(dense DB resident: {db.nbytes/1e6:.1f} MB), "
+              f"total peak RSS now {rss_mb():.1f} MB")
+
+        assert streamed.as_dict() == inmem.as_dict(), "streamed != in-memory"
+        assert son.as_dict() == inmem.as_dict(), "streamed SON != in-memory"
+        assert streamed.min_count == inmem.min_count
+        print("OUT_OF_CORE_OK — streamed, streamed-SON and in-memory results "
+              "are dict-identical")
+    finally:
+        if not args.keep_store:
+            shutil.rmtree(store_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

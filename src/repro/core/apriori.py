@@ -165,6 +165,27 @@ def _candidate_quantum(cfg: AprioriConfig, mesh) -> int:
     return ((quantum + model_shards - 1) // model_shards) * model_shards
 
 
+def _place_candidates(chunk: np.ndarray, kp: int, num_items: int, cfg: AprioriConfig, mesh):
+    """Encode one candidate pass to its device tensors: (Kp, ·) itemset rows
+    (dense int8 or packed uint32) zero-padded to the bucket, plus the
+    lengths vector with |c| = -1 padding sentinels, sharded P(model_axis)
+    when a mesh is given. Shared by the in-memory and streaming drivers."""
+    if cfg.representation == "packed":
+        c_host = np.zeros((kp, enc.packed_words(num_items)), dtype=np.uint32)
+        c_host[: chunk.shape[0]] = enc.itemsets_to_packed(chunk, num_items)
+    else:
+        c_host = np.zeros((kp, num_items), dtype=np.int8)
+        c_host[: chunk.shape[0]] = enc.itemsets_to_dense(chunk, num_items)
+    lengths = np.full(kp, -1, dtype=np.int32)
+    lengths[: chunk.shape[0]] = chunk.shape[1]
+    if mesh is not None:
+        c_dev = jax.device_put(c_host, NamedSharding(mesh, P(cfg.model_axis, None)))
+        len_dev = jax.device_put(lengths, NamedSharding(mesh, P(cfg.model_axis)))
+    else:
+        c_dev, len_dev = jnp.asarray(c_host), jnp.asarray(lengths)
+    return c_dev, len_dev
+
+
 def _count_level(count_step, t_dev, cand_sets: np.ndarray, num_items: int, cfg: AprioriConfig, mesh):
     """Count supports for one level's candidates, in passes, padded/bucketed.
 
@@ -177,7 +198,6 @@ def _count_level(count_step, t_dev, cand_sets: np.ndarray, num_items: int, cfg: 
     """
     k_total = cand_sets.shape[0]
     quantum = _candidate_quantum(cfg, mesh)
-    packed = cfg.representation == "packed"
     counts = np.zeros(k_total, dtype=np.int64)
     pending = []
 
@@ -189,54 +209,37 @@ def _count_level(count_step, t_dev, cand_sets: np.ndarray, num_items: int, cfg: 
     for start in range(0, k_total, cfg.max_candidates_per_pass):
         chunk = cand_sets[start : start + cfg.max_candidates_per_pass]
         kp = _pad_bucket(chunk.shape[0], quantum)
-        if packed:
-            c_host = np.zeros((kp, enc.packed_words(num_items)), dtype=np.uint32)
-            c_host[: chunk.shape[0]] = enc.itemsets_to_packed(chunk, num_items)
-        else:
-            c_host = np.zeros((kp, num_items), dtype=np.int8)
-            c_host[: chunk.shape[0]] = enc.itemsets_to_dense(chunk, num_items)
-        lengths = np.full(kp, -1, dtype=np.int32)
-        lengths[: chunk.shape[0]] = chunk.shape[1]
-        if mesh is not None:
-            c_dev = jax.device_put(c_host, NamedSharding(mesh, P(cfg.model_axis, None)))
-            len_dev = jax.device_put(lengths, NamedSharding(mesh, P(cfg.model_axis)))
-        else:
-            c_dev, len_dev = jnp.asarray(c_host), jnp.asarray(lengths)
+        c_dev, len_dev = _place_candidates(chunk, kp, num_items, cfg, mesh)
         pending.append((start, chunk.shape[0], count_step(t_dev, c_dev, len_dev)))
         _drain(limit=1)   # sync pass p only once pass p+1 is in flight
     _drain(limit=0)
     return counts
 
 
-def mine(
-    transactions_dense,
-    cfg: AprioriConfig = AprioriConfig(),
-    mesh: jax.sharding.Mesh | None = None,
+def run_level_loop(
+    count_fn: Callable[[np.ndarray], np.ndarray],
+    n: int,
+    num_items: int,
+    cfg: AprioriConfig,
     checkpoint_cb: Callable | None = None,
     resume_state: dict | None = None,
 ) -> AprioriResult:
-    """Level-wise distributed Apriori over a dense {0,1} transaction matrix.
+    """The driver's level loop, abstracted over HOW candidates are counted.
 
-    checkpoint_cb(level_k, levels_dict): called after each completed level —
-    the mining checkpoint hook (restartable via ``resume_state`` =
-    {'levels': ..., 'next_k': ...}, see distributed.fault_tolerance).
+    ``count_fn(cand_sets (K, k) int32) -> supports (K,) int``. Candidate
+    generation, min-support pruning, checkpointing and termination live
+    here — ``mine`` (whole DB device-resident) and
+    ``core.streaming.mine_streamed`` (per-level chunk streaming over an
+    on-disk store) both instantiate it, so the two drivers cannot drift.
     """
-    t_np = np.asarray(transactions_dense, dtype=np.int8)
-    n, num_items = t_np.shape
     min_count = max(1, math.ceil(cfg.min_support * n))
-
-    # --- encode + place the DB once: row-sharded over the data axes (HDFS
-    # layout); packed uint32 bitsets stay device-resident for the whole loop
-    t_dev = place_db(t_np, cfg, mesh)
-    count_step = make_count_step(mesh, cfg)
-
     levels = dict(resume_state["levels"]) if resume_state else {}
     start_k = resume_state["next_k"] if resume_state else 1
 
     if start_k <= 1:
         # level 1: supports of singletons — the same count path (uniform Map/Reduce)
         singles = enc.singleton_itemsets(num_items)
-        sup1 = _count_level(count_step, t_dev, singles, num_items, cfg, mesh)
+        sup1 = count_fn(singles)
         keep = sup1 >= min_count
         levels[1] = (singles[keep], sup1[keep])
         if checkpoint_cb:
@@ -256,7 +259,7 @@ def mine(
             cands = cand_mod.generate_candidates(prev_sets)
         if cands.shape[0] == 0:
             break
-        sup = _count_level(count_step, t_dev, cands, num_items, cfg, mesh)
+        sup = count_fn(cands)
         keep = sup >= min_count
         if not keep.any():
             break
@@ -265,3 +268,30 @@ def mine(
             checkpoint_cb(k, levels)
 
     return AprioriResult(levels=levels, num_transactions=n, min_count=min_count)
+
+
+def mine(
+    transactions_dense,
+    cfg: AprioriConfig = AprioriConfig(),
+    mesh: jax.sharding.Mesh | None = None,
+    checkpoint_cb: Callable | None = None,
+    resume_state: dict | None = None,
+) -> AprioriResult:
+    """Level-wise distributed Apriori over a dense {0,1} transaction matrix.
+
+    checkpoint_cb(level_k, levels_dict): called after each completed level —
+    the mining checkpoint hook (restartable via ``resume_state`` =
+    {'levels': ..., 'next_k': ...}, see distributed.fault_tolerance).
+    """
+    t_np = np.asarray(transactions_dense, dtype=np.int8)
+    n, num_items = t_np.shape
+
+    # --- encode + place the DB once: row-sharded over the data axes (HDFS
+    # layout); packed uint32 bitsets stay device-resident for the whole loop
+    t_dev = place_db(t_np, cfg, mesh)
+    count_step = make_count_step(mesh, cfg)
+
+    def count_fn(cand_sets):
+        return _count_level(count_step, t_dev, cand_sets, num_items, cfg, mesh)
+
+    return run_level_loop(count_fn, n, num_items, cfg, checkpoint_cb, resume_state)

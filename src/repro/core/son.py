@@ -44,6 +44,23 @@ def _mine_local(t_np: np.ndarray, min_count: int, cfg: ap.AprioriConfig) -> dict
     return res.levels
 
 
+def union_local_winners(partitions, cfg: ap.AprioriConfig) -> dict:
+    """The phase-1 mapper over an iterable of dense partitions: mine each
+    locally at the partition-scaled threshold and union the winners per
+    level. Streaming-friendly — partitions are consumed one at a time, so an
+    on-disk store can feed its shards without materializing the DB
+    (``core.streaming.mine_son_streamed``)."""
+    union: dict[int, set] = {}
+    for part in partitions:
+        part = np.asarray(part, dtype=np.int8)
+        if part.shape[0] == 0:
+            continue
+        local_min = max(1, math.ceil(cfg.min_support * part.shape[0]))
+        for k, (sets, _) in _mine_local(part, local_min, cfg).items():
+            union.setdefault(k, set()).update(tuple(int(x) for x in row) for row in sets)
+    return union
+
+
 def mine_son(
     transactions_dense,
     cfg: ap.AprioriConfig = ap.AprioriConfig(),
@@ -56,14 +73,9 @@ def mine_son(
 
     # ---- phase 1: local mining per partition, union of local winners ----
     bounds = np.linspace(0, n, num_partitions + 1).astype(int)
-    union: dict[int, set] = {}
-    for p in range(num_partitions):
-        part = t_np[bounds[p] : bounds[p + 1]]
-        if part.shape[0] == 0:
-            continue
-        local_min = max(1, math.ceil(cfg.min_support * part.shape[0]))
-        for k, (sets, _) in _mine_local(part, local_min, cfg).items():
-            union.setdefault(k, set()).update(tuple(int(x) for x in row) for row in sets)
+    union = union_local_winners(
+        (t_np[bounds[p] : bounds[p + 1]] for p in range(num_partitions)), cfg
+    )
 
     # ---- phase 2: one exact global count of the union (the same encode +
     # place + count path as the level-wise miner, incl. packed bitsets) ----

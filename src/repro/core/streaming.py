@@ -1,0 +1,233 @@
+"""Streaming Map/Reduce mining over an on-disk transaction store.
+
+The paper's jobs never load the DB: each map task streams its HDFS block,
+emits partial counts, and a combiner folds them before the reduce. This
+module is that dataflow for the miner (DESIGN.md §9): the DB lives in a
+``data.store.TransactionStore`` (packed uint32 shards on disk), and each
+level's count pass iterates fixed-size row chunks through the SAME jit'd
+count step as the in-memory driver, **accumulating per-candidate partial
+counts on device** — the combiner. The host syncs a candidate pass exactly
+once, after its last chunk, so per level there is a single device→host
+transfer regardless of chunk count.
+
+Host peak RSS is bounded by O(chunk_rows · row_bytes) (plus the candidate
+tensors), not the dataset size: chunks are copied out of the mmap'd shards
+one at a time, and a ``data.pipeline.ShardedBatchIterator`` double-buffers
+the host→device transfer so chunk assembly overlaps device counting.
+
+Exactness: support counting is integer arithmetic and every chunk row is
+either a real transaction or an inert zero row (DESIGN.md §3), so the
+chunk-sum equals the whole-DB count bit-for-bit — ``mine_streamed`` /
+``mine_son_streamed`` are dict-equal to ``mine`` / ``mine_son`` at any
+chunk size.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING, Callable
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import apriori as ap
+from repro.core import son as son_mod
+from repro.data.pipeline import ShardedBatchIterator, batch_spec
+
+if TYPE_CHECKING:  # import-time would cycle: data.store -> core -> streaming
+    from repro.data.store import TransactionStore
+
+
+def make_accum_count_step(mesh, cfg: ap.AprioriConfig) -> Callable:
+    """The combiner: jit'd ``(t_chunk, c, lengths, acc) -> acc + counts``.
+
+    Wraps :func:`core.apriori.make_count_step` (so dense/packed, jnp/Pallas
+    and the mesh Map/Reduce shape are all inherited unchanged) and folds the
+    chunk's counts into a device-resident int32 accumulator — partial
+    aggregation happens where the data is, exactly like a Hadoop combiner.
+    """
+    count_step = ap.make_count_step(mesh, cfg)
+
+    def step(t_chunk, c_dev, len_dev, acc):
+        return acc + count_step(t_chunk, c_dev, len_dev)
+
+    return jax.jit(step)
+
+
+def _init_acc(kp: int, cfg: ap.AprioriConfig, mesh):
+    zeros = np.zeros(kp, dtype=np.int32)
+    if mesh is None:
+        return jax.numpy.asarray(zeros)
+    return jax.device_put(zeros, NamedSharding(mesh, P(cfg.model_axis)))
+
+
+def _effective_chunk_rows(chunk_rows: int, cfg: ap.AprioriConfig, mesh) -> int:
+    """Round the chunk up to a multiple of the data-shard count so every
+    chunk splits evenly over P(data_axes) (padding rows are inert)."""
+    if chunk_rows < 1:
+        raise ValueError("chunk_rows must be >= 1")
+    if mesh is None:
+        return chunk_rows
+    shards = math.prod(mesh.shape[a] for a in cfg.data_axes)
+    return ((chunk_rows + shards - 1) // shards) * shards
+
+
+def _count_pass_chunks(accum_step, chunks, c_dev, len_dev, kp, cfg, mesh, prefetch):
+    """Fold every DB chunk into a fresh device accumulator; sync ONCE."""
+    acc = _init_acc(kp, cfg, mesh)
+    it = ShardedBatchIterator(chunks, mesh, batch_spec(cfg.data_axes), prefetch=prefetch)
+    try:
+        for t_chunk in it:
+            acc = accum_step(t_chunk, c_dev, len_dev, acc)
+    finally:
+        it.close()
+    return np.asarray(acc)   # the single host sync of this candidate pass
+
+
+def count_supports_streamed(
+    store: TransactionStore,
+    cand_sets: np.ndarray,
+    cfg: ap.AprioriConfig = ap.AprioriConfig(),
+    mesh=None,
+    chunk_rows: int = 8192,
+    prefetch: int = 2,
+) -> np.ndarray:
+    """Exact support counts of ``cand_sets`` over an on-disk store.
+
+    The streamed twin of the in-memory driver's per-level count: candidates
+    split into ``max_candidates_per_pass`` passes padded to the same jit
+    buckets; each pass streams all DB chunks through the accumulate step.
+    Equals the whole-DB count exactly, for both representations, at any
+    ``chunk_rows`` (including sizes that don't divide n — the final chunk
+    zero-pads, and zero rows are inert).
+    """
+    cand_sets = np.asarray(cand_sets, dtype=np.int32)
+    num_items = store.num_items
+    chunk_rows = _effective_chunk_rows(chunk_rows, cfg, mesh)
+    accum_step = make_accum_count_step(mesh, cfg)
+    return _count_level_streamed(
+        accum_step, store, cand_sets, num_items, cfg, mesh, chunk_rows, prefetch
+    )
+
+
+def _count_level_streamed(
+    accum_step, store, cand_sets, num_items, cfg, mesh, chunk_rows, prefetch
+):
+    k_total = cand_sets.shape[0]
+    quantum = ap._candidate_quantum(cfg, mesh)
+    counts = np.zeros(k_total, dtype=np.int64)
+    for start in range(0, k_total, cfg.max_candidates_per_pass):
+        chunk_c = cand_sets[start : start + cfg.max_candidates_per_pass]
+        kp = ap._pad_bucket(chunk_c.shape[0], quantum)
+        c_dev, len_dev = ap._place_candidates(chunk_c, kp, num_items, cfg, mesh)
+        chunks = (
+            chunk
+            for chunk, _ in store.iter_chunks(
+                chunk_rows, representation=cfg.representation, pad=True
+            )
+        )
+        out = _count_pass_chunks(
+            accum_step, chunks, c_dev, len_dev, kp, cfg, mesh, prefetch
+        )
+        counts[start : start + chunk_c.shape[0]] = out[: chunk_c.shape[0]]
+    return counts
+
+
+def mine_streamed(
+    store: TransactionStore,
+    cfg: ap.AprioriConfig = ap.AprioriConfig(),
+    mesh=None,
+    chunk_rows: int = 8192,
+    prefetch: int = 2,
+    checkpoint_cb: Callable | None = None,
+    resume_state: dict | None = None,
+) -> ap.AprioriResult:
+    """Level-wise Apriori over an on-disk store, dict-equal to ``mine``.
+
+    Identical driver semantics by construction — this is
+    ``core.apriori.run_level_loop`` with the count function swapped for the
+    chunk-streaming accumulator. Host RSS scales with ``chunk_rows``, not
+    ``store.num_transactions``; the DB is re-streamed from disk once per
+    candidate pass (sequential mmap reads — the per-pass I/O the paper's
+    per-level Hadoop jobs pay too).
+    """
+    n, num_items = store.num_transactions, store.num_items
+    chunk_rows = _effective_chunk_rows(chunk_rows, cfg, mesh)
+    accum_step = make_accum_count_step(mesh, cfg)
+
+    def count_fn(cand_sets):
+        return _count_level_streamed(
+            accum_step, store, cand_sets, num_items, cfg, mesh, chunk_rows, prefetch
+        )
+
+    return ap.run_level_loop(count_fn, n, num_items, cfg, checkpoint_cb, resume_state)
+
+
+def mine_son_streamed(
+    store: TransactionStore,
+    cfg: ap.AprioriConfig = ap.AprioriConfig(),
+    mesh=None,
+    chunk_rows: int = 8192,
+    prefetch: int = 2,
+) -> ap.AprioriResult:
+    """SON two-phase mining over an on-disk store, dict-equal to
+    ``mine_son`` (and to ``mine`` — SON is exact for any partitioning).
+
+    Phase 1 maps over the store's *on-disk shards* as the SON partitions:
+    each shard is unpacked and mined locally to completion at the
+    shard-scaled threshold, one shard in RAM at a time. Phase 2 is ONE
+    streamed exact count of the union — two distributed rounds total, never
+    the whole DB in memory.
+    """
+    n, num_items = store.num_transactions, store.num_items
+    min_count = max(1, math.ceil(cfg.min_support * n))
+    chunk_rows = _effective_chunk_rows(chunk_rows, cfg, mesh)
+
+    # ---- phase 1: local mining per on-disk shard, union of local winners --
+    union = son_mod.union_local_winners(
+        (store.partition_dense(p) for p in range(store.num_partitions)), cfg
+    )
+
+    # ---- phase 2: ONE streamed exact count of the whole union ----
+    # All levels' candidate passes are device-placed up front (the union is
+    # the modest survivor set, not a full level's candidates — this trades
+    # the max_candidates_per_pass memory bound for a single disk scan), then
+    # every DB chunk folds into every pass's accumulator: one pass over the
+    # store total, the SON round-count promise kept at the I/O layer too.
+    accum_step = make_accum_count_step(mesh, cfg)
+    quantum = ap._candidate_quantum(cfg, mesh)
+    per_level = {k: np.array(sorted(union[k]), dtype=np.int32) for k in sorted(union)}
+    units = []   # (k, start, rows, c_dev, len_dev, acc)
+    for k, cands in per_level.items():
+        for start in range(0, cands.shape[0], cfg.max_candidates_per_pass):
+            chunk_c = cands[start : start + cfg.max_candidates_per_pass]
+            kp = ap._pad_bucket(chunk_c.shape[0], quantum)
+            c_dev, len_dev = ap._place_candidates(chunk_c, kp, num_items, cfg, mesh)
+            units.append([k, start, chunk_c.shape[0], c_dev, len_dev, _init_acc(kp, cfg, mesh)])
+    if units:
+        chunks = (
+            chunk
+            for chunk, _ in store.iter_chunks(
+                chunk_rows, representation=cfg.representation, pad=True
+            )
+        )
+        it = ShardedBatchIterator(chunks, mesh, batch_spec(cfg.data_axes), prefetch=prefetch)
+        try:
+            for t_chunk in it:
+                for u in units:
+                    u[5] = accum_step(t_chunk, u[3], u[4], u[5])
+        finally:
+            it.close()
+
+    levels = {}
+    for k, cands in per_level.items():
+        sup = np.zeros(cands.shape[0], dtype=np.int64)
+        for uk, start, rows, _, _, acc in units:
+            if uk == k:
+                sup[start : start + rows] = np.asarray(acc)[:rows]
+        keep = sup >= min_count
+        if keep.any():
+            levels[k] = (cands[keep], sup[keep])
+    return ap.AprioriResult(levels=levels, num_transactions=n, min_count=min_count)

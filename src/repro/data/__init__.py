@@ -1,3 +1,12 @@
-from repro.data.synthetic import gen_transactions, QuestConfig
+from repro.data.synthetic import gen_transactions, gen_transactions_chunked, QuestConfig
 from repro.data.corpus import transactions_from_tokens
 from repro.data.pipeline import ShardedBatchIterator, synthetic_token_batches
+from repro.data.store import (
+    TransactionStore,
+    StoreWriter,
+    open_store,
+    ingest_chunks,
+    ingest_dense,
+    ingest_lists,
+    ingest_quest,
+)

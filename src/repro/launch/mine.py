@@ -7,10 +7,19 @@
   # mine AND emit a servable rulebook artifact (serving/rulebook.py):
   PYTHONPATH=src python -m repro.launch.mine ... --rulebook rb.npz \
       --min-confidence 0.6 --rule-score confidence --max-rules 8192
+  # out-of-core: ingest to an on-disk store, then stream-mine it
+  # (host RAM bounded by --stream-chunk-rows, DESIGN.md §9):
+  PYTHONPATH=src python -m repro.launch.mine --transactions 2000000 \
+      --store /data/quest_2m --ingest --stream-chunk-rows 8192
 
 ``--rulebook PATH`` compiles the mined itemsets into the packed-bitset rule
 columns the Pallas rule-match serving engine consumes (DESIGN.md §8) and
 saves them as one ``.npz``; serve it with ``examples/serve_rules.py``.
+
+``--store PATH`` switches the driver to the out-of-core path: the synthetic
+DB is ingested CHUNKED into a packed-shard store at PATH (``--ingest``
+forces re-ingest; otherwise an existing store is reused) and mined with the
+streaming Map/Reduce driver — the dense matrix is never materialized.
 """
 
 from __future__ import annotations
@@ -46,6 +55,15 @@ def main():
     ap.add_argument("--max-rules", type=int, default=None,
                     help="truncate the rulebook to the top-scoring rules")
     ap.add_argument("--ckpt", default="", help="mining checkpoint dir (resume per level)")
+    ap.add_argument("--store", default="", metavar="DIR",
+                    help="on-disk transaction store: mine out-of-core via the "
+                         "streaming driver (ingested here if absent)")
+    ap.add_argument("--ingest", action="store_true",
+                    help="force (re-)ingest of the synthetic DB into --store")
+    ap.add_argument("--stream-chunk-rows", type=int, default=8192,
+                    help="rows per streamed chunk (bounds host RAM during mining)")
+    ap.add_argument("--shard-rows", type=int, default=8192,
+                    help="rows per on-disk shard at ingest (= SON partition size)")
     args = ap.parse_args()
 
     if args.host_devices and "XLA_FLAGS" not in os.environ:
@@ -69,10 +87,26 @@ def main():
         mesh = make_auto_mesh((dd, mm), ("data", "model"))
         model_axis = "model"
 
-    print(f"[mine] generating {args.transactions} transactions x {args.items} items ...")
-    db = gen_transactions(QuestConfig(
+    qcfg = QuestConfig(
         num_transactions=args.transactions, num_items=args.items,
-        avg_len=args.avg_len, seed=args.seed))
+        avg_len=args.avg_len, seed=args.seed)
+
+    db = store = None
+    if args.store:
+        from repro.data.store import ingest_quest, open_store
+
+        if args.ingest or not os.path.exists(os.path.join(args.store, "manifest.json")):
+            print(f"[mine] ingesting {args.transactions} x {args.items} (chunked) "
+                  f"-> {args.store} ...")
+            store = ingest_quest(qcfg, args.store, shard_rows=args.shard_rows,
+                                 chunk_rows=args.stream_chunk_rows)
+        else:
+            store = open_store(args.store)
+        print(f"[mine] store: n={store.num_transactions} items={store.num_items} "
+              f"shards={store.num_partitions}")
+    else:
+        print(f"[mine] generating {args.transactions} transactions x {args.items} items ...")
+        db = gen_transactions(qcfg)
 
     cfg = AprioriConfig(
         min_support=args.min_support, max_k=args.max_k, count_impl=args.impl,
@@ -109,7 +143,17 @@ def main():
             resume = {"levels": levels, "next_k": last + 1}
 
     t0 = time.time()
-    if args.algo == "son":
+    if store is not None:
+        from repro.core.streaming import mine_son_streamed, mine_streamed
+
+        if args.algo == "son":
+            res = mine_son_streamed(store, cfg, mesh=mesh,
+                                    chunk_rows=args.stream_chunk_rows)
+        else:
+            res = mine_streamed(store, cfg, mesh=mesh,
+                                chunk_rows=args.stream_chunk_rows,
+                                checkpoint_cb=ckpt_cb, resume_state=resume)
+    elif args.algo == "son":
         res = mine_son(db, cfg, mesh=mesh, num_partitions=args.partitions)
     else:
         res = mine(db, cfg, mesh=mesh, checkpoint_cb=ckpt_cb, resume_state=resume)

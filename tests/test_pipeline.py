@@ -1,0 +1,79 @@
+"""data.pipeline.ShardedBatchIterator: iteration semantics and the
+close()-terminates-the-worker regression (the seed's close() only set the
+stop event — a worker blocked in a full queue's put() never rechecked it
+and leaked forever)."""
+
+import itertools
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import ShardedBatchIterator, batch_spec
+
+
+def _batches(n, rows=4, cols=3):
+    for i in range(n):
+        yield np.full((rows, cols), i, dtype=np.int32)
+
+
+def test_iterates_all_batches_in_order():
+    it = ShardedBatchIterator(_batches(5), None, batch_spec())
+    got = [int(np.asarray(b)[0, 0]) for b in it]
+    assert got == [0, 1, 2, 3, 4]
+    assert not it._thread.is_alive()
+
+
+def test_close_joins_blocked_worker():
+    """Regression: the worker fills the prefetch queue, the consumer stops
+    taking, close() must still terminate and join the thread."""
+    it = ShardedBatchIterator(_batches(10_000), None, batch_spec(), prefetch=2)
+    next(it)   # worker is now (or will be) blocked in a full-queue put
+    time.sleep(0.05)
+    it.close()
+    assert not it._thread.is_alive(), "close() must join the worker thread"
+    # iteration after close terminates instead of hanging
+    assert list(itertools.islice(it, 5)) == []
+
+
+def test_close_on_infinite_generator():
+    def forever():
+        i = 0
+        while True:
+            yield np.full((2, 2), i, np.int32)
+            i += 1
+
+    it = ShardedBatchIterator(forever(), None, batch_spec(), prefetch=3)
+    for _ in range(4):
+        next(it)
+    it.close()
+    assert not it._thread.is_alive()
+
+
+def test_context_manager_closes():
+    with ShardedBatchIterator(_batches(100), None, batch_spec()) as it:
+        next(it)
+    assert not it._thread.is_alive()
+
+
+def test_worker_exception_propagates_to_consumer():
+    """A generator failure mid-stream must raise at the consumer, not look
+    like a clean (short) end-of-stream — streamed counts would silently
+    undercount otherwise."""
+
+    def broken():
+        yield np.zeros((2, 2), np.int32)
+        raise OSError("shard read failed")
+
+    it = ShardedBatchIterator(broken(), None, batch_spec())
+    next(it)
+    with pytest.raises(OSError, match="shard read failed"):
+        next(it)
+    assert not it._thread.is_alive()
+
+
+def test_close_idempotent_and_reentrant():
+    it = ShardedBatchIterator(_batches(50), None, batch_spec())
+    it.close()
+    it.close()
+    assert not it._thread.is_alive()

@@ -1,0 +1,148 @@
+"""On-disk partitioned transaction store: ingest roundtrips, manifest
+schema/versioning, chunk iteration and padding invariants (DESIGN.md §9)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.itemsets import pack_bits, packed_words
+from repro.data import store as st
+from repro.data.synthetic import QuestConfig, gen_transactions
+
+
+def _rand_dense(n, i, seed=0, density=0.25):
+    rng = np.random.default_rng(seed)
+    return (rng.random((n, i)) < density).astype(np.int8)
+
+
+# -------------------------------------------------------------- roundtrip ----
+@pytest.mark.parametrize("n,i,shard_rows", [(100, 37, 30), (64, 32, 64), (257, 65, 100), (10, 7, 1000)])
+def test_ingest_dense_roundtrip(tmp_path, n, i, shard_rows):
+    dense = _rand_dense(n, i, seed=n)
+    s = st.ingest_dense(dense, str(tmp_path / "db"), shard_rows=shard_rows)
+    assert s.num_transactions == n and s.num_items == i
+    assert sum(s.manifest.shard_rows) == n
+    # fixed-row shards: all but the last are exactly shard_rows
+    assert all(r == shard_rows for r in s.manifest.shard_rows[:-1])
+    assert np.array_equal(s.read_dense(), dense)
+
+
+def test_ingest_lists_matches_dense(tmp_path):
+    dense = _rand_dense(50, 40, seed=2)
+    lists = [np.flatnonzero(r).tolist() for r in dense]
+    s1 = st.ingest_lists(lists, 40, str(tmp_path / "a"), shard_rows=16, chunk_rows=7)
+    s2 = st.ingest_dense(dense, str(tmp_path / "b"), shard_rows=16)
+    assert np.array_equal(s1.read_dense(), s2.read_dense())
+
+
+def test_ingest_chunks_accepts_dense_and_packed(tmp_path):
+    dense = _rand_dense(45, 33, seed=3)
+    chunks_dense = [dense[:20], dense[20:]]
+    chunks_packed = [pack_bits(dense[:10]), pack_bits(dense[10:])]
+    s1 = st.ingest_chunks(chunks_dense, 33, str(tmp_path / "a"), shard_rows=16)
+    s2 = st.ingest_chunks(chunks_packed, 33, str(tmp_path / "b"), shard_rows=16)
+    assert np.array_equal(s1.read_dense(), dense)
+    assert np.array_equal(s2.read_dense(), dense)
+
+
+def test_ingest_quest_matches_gen_transactions(tmp_path):
+    qcfg = QuestConfig(num_transactions=300, num_items=48, avg_len=7, seed=11)
+    s = st.ingest_quest(qcfg, str(tmp_path / "q"), shard_rows=77, chunk_rows=41)
+    assert np.array_equal(s.read_dense(), gen_transactions(qcfg))
+
+
+# --------------------------------------------------------------- manifest ----
+def test_manifest_schema_and_mmap(tmp_path):
+    dense = _rand_dense(80, 70, seed=4)
+    s = st.ingest_dense(dense, str(tmp_path / "db"), shard_rows=32)
+    with open(os.path.join(s.path, st.MANIFEST_NAME)) as f:
+        d = json.load(f)
+    assert d["version"] == st.LAYOUT_VERSION
+    assert d["layout"] == st.LAYOUT_NAME
+    assert d["n"] == 80 and d["num_items"] == 70
+    assert d["words"] == packed_words(70)
+    assert d["shard_rows"] == [32, 32, 16]
+    # shards open memory-mapped, packed layout
+    part = s.partition_packed(0)
+    assert isinstance(part, np.memmap) and part.dtype == np.uint32
+    assert np.array_equal(s.partition_dense(2), dense[64:])
+
+
+def test_open_store_rejects_version_mismatch(tmp_path):
+    s = st.ingest_dense(_rand_dense(10, 8), str(tmp_path / "db"), shard_rows=8)
+    mpath = os.path.join(s.path, st.MANIFEST_NAME)
+    with open(mpath) as f:
+        d = json.load(f)
+    d["version"] = st.LAYOUT_VERSION + 1
+    with open(mpath, "w") as f:
+        json.dump(d, f)
+    with pytest.raises(ValueError, match="layout version"):
+        st.open_store(s.path)
+
+
+def test_open_store_requires_manifest(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        st.open_store(str(tmp_path / "nowhere"))
+
+
+def test_reingest_invalidates_old_manifest_and_shards(tmp_path):
+    path = str(tmp_path / "db")
+    st.ingest_dense(_rand_dense(50, 8, seed=1), path, shard_rows=8)  # 7 shards
+    s = st.ingest_dense(_rand_dense(12, 8, seed=2), path, shard_rows=8)
+    assert s.num_transactions == 12
+    assert np.array_equal(st.open_store(path).read_dense(), _rand_dense(12, 8, seed=2))
+    # no orphan shard files from the larger first ingest
+    shards_on_disk = sorted(f for f in os.listdir(path) if f.startswith("shard_"))
+    assert shards_on_disk == [st.shard_filename(0), st.shard_filename(1)]
+
+
+def test_writer_rejects_shape_mismatch(tmp_path):
+    w = st.StoreWriter(str(tmp_path / "db"), num_items=16, shard_rows=8)
+    with pytest.raises(ValueError):
+        w.append_dense(np.zeros((4, 17), np.int8))
+    with pytest.raises(ValueError):
+        w.append_packed(np.zeros((4, 3), np.uint32))  # words(16) == 1
+
+
+# ----------------------------------------------------------------- chunks ----
+@pytest.mark.parametrize("chunk_rows", [1, 13, 30, 100, 1000])
+def test_iter_chunks_covers_all_rows_across_shards(tmp_path, chunk_rows):
+    dense = _rand_dense(100, 37, seed=5)
+    s = st.ingest_dense(dense, str(tmp_path / "db"), shard_rows=30)
+    got = []
+    for chunk, valid in s.iter_chunks(chunk_rows, representation="dense"):
+        assert valid == chunk.shape[0] <= chunk_rows
+        got.append(chunk)
+    assert np.array_equal(np.concatenate(got), dense)
+
+
+def test_iter_chunks_packed_matches_pack_bits(tmp_path):
+    dense = _rand_dense(64, 48, seed=6)
+    s = st.ingest_dense(dense, str(tmp_path / "db"), shard_rows=25)
+    got = np.concatenate([c for c, _ in s.iter_chunks(17, representation="packed")])
+    assert np.array_equal(got, pack_bits(dense))
+
+
+def test_iter_chunks_pad_fixed_shape(tmp_path):
+    """pad=True: every chunk has exactly chunk_rows rows, tail zero-filled
+    (inert rows, DESIGN.md §3) — the fixed jit shape the streamer relies on."""
+    dense = _rand_dense(50, 32, seed=7)
+    s = st.ingest_dense(dense, str(tmp_path / "db"), shard_rows=20)
+    chunks = list(s.iter_chunks(16, representation="packed", pad=True))
+    assert [c.shape[0] for c, _ in chunks] == [16, 16, 16, 16]
+    assert [v for _, v in chunks] == [16, 16, 16, 2]
+    last, valid = chunks[-1]
+    assert np.array_equal(last[valid:], np.zeros((14, last.shape[1]), np.uint32))
+    assert np.array_equal(
+        np.concatenate([c[:v] for c, v in chunks]), pack_bits(dense)
+    )
+
+
+def test_iter_chunks_rejects_bad_args(tmp_path):
+    s = st.ingest_dense(_rand_dense(10, 8), str(tmp_path / "db"))
+    with pytest.raises(ValueError):
+        list(s.iter_chunks(0))
+    with pytest.raises(ValueError):
+        list(s.iter_chunks(4, representation="sparse"))
