@@ -1,0 +1,113 @@
+"""Open/closed-loop load generators for the serving gateway (DESIGN.md §10).
+
+Two standard load shapes against a :class:`repro.serving.Gateway`:
+
+* **closed loop** — ``concurrency`` client threads, each submitting its next
+  basket only after its previous response arrives. Measures the gateway's
+  sustainable throughput at a given client population (the micro-batcher
+  back-builds batches while the device is busy).
+* **open loop** — requests fired on a fixed-rate schedule regardless of
+  completions (the arrival process of independent web users). Overload shows
+  up as admission rejects + latency growth instead of silently throttling
+  the generator.
+
+Both return one plain dict: achieved QPS, exact p50/p95/p99 from the raw
+latency samples (the gateway's own histogram is the bucketed view of the
+same numbers), rejects, cache hits, and the set of rulebook generations
+that answered — the fields the bench rows, the serve CLI and the CI gates
+consume.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.serving import AdmissionRejected
+
+
+def _summarize(latencies, rejected, generations, cached, wall_s) -> dict:
+    lat = np.asarray(sorted(latencies), dtype=np.float64)
+    pct = lambda q: float(np.percentile(lat, q)) * 1e3 if lat.size else 0.0
+    return {
+        "responses": int(lat.size),
+        "rejected": int(rejected),
+        "cached": int(cached),
+        "generations": sorted(generations),
+        "wall_s": wall_s,
+        "qps": lat.size / wall_s if wall_s > 0 else 0.0,
+        "p50_ms": pct(50),
+        "p95_ms": pct(95),
+        "p99_ms": pct(99),
+    }
+
+
+def closed_loop(gateway, baskets, *, num_requests: int, concurrency: int,
+                top_k: int = 10) -> dict:
+    """``concurrency`` synchronous clients round-robin over ``baskets``."""
+    counter = itertools.count()
+    lock = threading.Lock()
+    latencies, generations = [], set()
+    rejected = cached = 0
+
+    def client():
+        nonlocal rejected, cached
+        while True:
+            i = next(counter)
+            if i >= num_requests:
+                return
+            try:
+                resp = gateway.submit(baskets[i % len(baskets)], top_k).result(timeout=120)
+            except AdmissionRejected:
+                with lock:
+                    rejected += 1
+                continue
+            with lock:
+                latencies.append(resp.latency_s)
+                generations.add(resp.generation)
+                cached += resp.cached
+
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=concurrency) as pool:
+        workers = [pool.submit(client) for _ in range(concurrency)]
+    wall = time.perf_counter() - t0
+    for w in workers:           # surface client-thread failures, don't swallow
+        w.result()
+    return _summarize(latencies, rejected, generations, cached, wall)
+
+
+def open_loop(gateway, baskets, *, rate_qps: float, duration_s: float,
+              top_k: int = 10) -> dict:
+    """Fixed-rate arrivals for ``duration_s``; completions collected after."""
+    period = 1.0 / rate_qps
+    futures, rejected = [], 0
+    t0 = time.perf_counter()
+    n = 0
+    while True:
+        now = time.perf_counter()
+        if now - t0 >= duration_s:
+            break
+        target = t0 + n * period
+        if now < target:
+            time.sleep(min(target - now, 0.005))
+            continue
+        try:
+            futures.append(gateway.submit(baskets[n % len(baskets)], top_k))
+        except AdmissionRejected:
+            rejected += 1
+        n += 1
+    latencies, generations = [], set()
+    cached = 0
+    for f in futures:
+        resp = f.result(timeout=120)
+        latencies.append(resp.latency_s)
+        generations.add(resp.generation)
+        cached += resp.cached
+    wall = time.perf_counter() - t0
+    out = _summarize(latencies, rejected, generations, cached, wall)
+    out["offered_qps"] = rate_qps
+    return out

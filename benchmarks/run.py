@@ -13,7 +13,10 @@ Run: PYTHONPATH=src python -m benchmarks.run  [--quick] [--json out.json]
 
 ``--json`` additionally emits the rows as machine-readable JSON
 (name/us/derived per row + backend metadata) so CI can archive the perf
-trajectory (BENCH_*.json artifacts) across PRs.
+trajectory (BENCH_*.json artifacts) across PRs. The ``serve_*`` rows
+(rule-match engine + online gateway QPS/latency percentiles, §8/§10) are
+ALWAYS persisted to ``BENCH_serve.json`` at the repo root — the committed
+cross-PR serving-perf trajectory the CI throughput gate reads.
 """
 
 from __future__ import annotations
@@ -234,6 +237,52 @@ def _synthetic_rulebook(num_rules, num_items, seed=0):
     return Rulebook(ante, cons, na.astype(np.int32), scores, num_items)
 
 
+def bench_serve_gateway(quick=False):
+    """Online gateway QPS: micro-batched concurrent clients vs sequential
+    single-request serving, plus the hot exact-basket cache path (§10).
+
+    Both QPS rows run with the cache DISABLED so they measure the scheduler
+    + match-step path. The sequential baseline runs ``max_wait_ms=0``
+    (greedy) so it pays no artificial per-request wait; the micro-batched
+    row runs the standard 1 ms coalescing window — the configuration the CI
+    throughput gate (micro-batched >= 2x sequential) asserts."""
+    from benchmarks.load_gen import closed_loop
+    from repro.core.itemsets import pack_bits
+    from repro.serving import Gateway
+
+    num_rules, num_items = 4096, 256
+    rb = _synthetic_rulebook(num_rules, num_items)
+    rng = np.random.default_rng(2)
+    baskets = list(pack_bits((rng.random((512, num_items)) < 0.1).astype(np.int8)))
+    n_seq = 300 if quick else 1_500
+    n_con = 1_500 if quick else 6_000
+
+    with Gateway(rb, max_batch=64, max_wait_ms=0.0, cache_capacity=0) as gw:
+        seq = closed_loop(gw, baskets, num_requests=n_seq, concurrency=1)
+    row("serve_gateway_sequential", seq["wall_s"] / max(seq["responses"], 1) * 1e6,
+        f"qps={seq['qps']:.0f};p50_ms={seq['p50_ms']:.2f};p95_ms={seq['p95_ms']:.2f};"
+        f"p99_ms={seq['p99_ms']:.2f};rules={num_rules}")
+
+    with Gateway(rb, max_batch=64, max_wait_ms=1.0, cache_capacity=0,
+                 warmup="ladder") as gw:
+        con = closed_loop(gw, baskets, num_requests=n_con, concurrency=32)
+        occ = gw.metrics.batch_occupancy
+    row("serve_gateway_microbatch_c32",
+        con["wall_s"] / max(con["responses"], 1) * 1e6,
+        f"qps={con['qps']:.0f};p50_ms={con['p50_ms']:.2f};p95_ms={con['p95_ms']:.2f};"
+        f"p99_ms={con['p99_ms']:.2f};occupancy={occ:.2f};"
+        f"speedup_vs_sequential={con['qps'] / max(seq['qps'], 1e-9):.1f}x")
+
+    # hot-cache path: every basket repeats, second pass all hits
+    with Gateway(rb, max_batch=64, max_wait_ms=1.0, cache_capacity=1024) as gw:
+        closed_loop(gw, baskets[:64], num_requests=64, concurrency=8)   # fill
+        hot = closed_loop(gw, baskets[:64], num_requests=512, concurrency=8)
+        hit_rate = gw.cache.hit_rate
+    row("serve_gateway_cache_hot",
+        hot["wall_s"] / max(hot["responses"], 1) * 1e6,
+        f"qps={hot['qps']:.0f};hit_rate={hit_rate:.2f};p50_ms={hot['p50_ms']:.3f}")
+
+
 def bench_rule_serving(quick=False):
     """Rule-match serving engine QPS: kernel path vs per-basket Python.
 
@@ -390,20 +439,31 @@ def main() -> None:
     bench_mine_representations(q)
     bench_out_of_core(q)
     bench_rule_serving(q)
+    bench_serve_gateway(q)
     bench_roofline_from_dryrun(q)
 
-    if args.json:
-        import jax
+    import jax
 
-        payload = {
-            "backend": jax.default_backend(),
-            "quick": q,
-            "unix_time": time.time(),
-            "rows": [{"name": n, "us_per_call": u, "derived": d} for n, u, d in ROWS],
-        }
+    payload = {
+        "backend": jax.default_backend(),
+        "quick": q,
+        "unix_time": time.time(),
+        "rows": [{"name": n, "us_per_call": u, "derived": d} for n, u, d in ROWS],
+    }
+    if args.json:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {len(ROWS)} rows to {args.json}", file=sys.stderr)
+
+    # the serving trajectory is ALWAYS persisted at the repo root so QPS +
+    # latency percentiles are comparable across PRs (CI gates read this)
+    serve_rows = [r for r in payload["rows"] if r["name"].startswith("serve_")]
+    serve_path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                              "BENCH_serve.json")
+    with open(serve_path, "w") as f:
+        json.dump({**{k: payload[k] for k in ("backend", "quick", "unix_time")},
+                   "rows": serve_rows}, f, indent=2)
+    print(f"# wrote {len(serve_rows)} serving rows to {serve_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

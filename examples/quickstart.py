@@ -1,6 +1,16 @@
 """Quickstart: mine frequent itemsets + association rules on synthetic data.
 
 PYTHONPATH=src python examples/quickstart.py
+
+To go from mined rules to an ONLINE service (store -> mine_streamed ->
+rulebook -> micro-batched gateway with live hot-swap, DESIGN.md §10), the
+whole pipeline is one command:
+
+    PYTHONPATH=src python -m repro.launch.serve --transactions 4000 \
+        --items 128 --requests 2000 --concurrency 16 --hot-swap-mid-load
+
+(`examples/serve_gateway.py` is the same flow, step by step; the smaller
+`examples/serve_rules.py` stops at the pre-assembled batch engine.)
 """
 
 from repro.core.apriori import AprioriConfig, mine
@@ -23,6 +33,10 @@ def main():
     print("top rules:")
     for r in rules:
         print(f"  {r.antecedent} -> {r.consequent}   conf={r.confidence:.2f} lift={r.lift:.2f}")
+
+    # 4. serve them online: see the module docstring — `repro.launch.serve`
+    #    runs store -> mine_streamed -> rulebook -> micro-batched gateway
+    print("next: PYTHONPATH=src python -m repro.launch.serve --hot-swap-mid-load")
 
 
 if __name__ == "__main__":

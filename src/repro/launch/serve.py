@@ -1,0 +1,201 @@
+"""Online serving driver: load store → mine → compile → serve loop (§10).
+
+  # end to end on synthetic data (store ingested under a temp dir):
+  PYTHONPATH=src python -m repro.launch.serve --transactions 4000 --items 128 \
+      --requests 2000 --concurrency 16
+  # persistent store (reused when the manifest exists; --ingest re-ingests):
+  PYTHONPATH=src python -m repro.launch.serve --store /data/quest --ingest ...
+  # exercise a live rulebook hot-swap halfway through the client load:
+  PYTHONPATH=src python -m repro.launch.serve ... --hot-swap-mid-load \
+      --swap-min-support 0.04
+  # machine-readable summary (the CI smoke gate reads this):
+  PYTHONPATH=src python -m repro.launch.serve ... --json serve-smoke.json
+
+The full paper-to-production pipeline in one command: the synthetic DB is
+ingested CHUNKED into an on-disk ``TransactionStore``, mined with the
+streaming Map/Reduce driver (``mine_streamed``), compiled into a servable
+rulebook, and served through the micro-batched online ``Gateway`` while a
+closed-loop client population (``--concurrency`` threads, baskets drawn from
+the store's own transactions) fires independent single-basket queries.
+``--hot-swap-mid-load`` re-mines the SAME store at ``--swap-min-support``
+while traffic is running and hot-swaps the fresh rulebook in: the summary
+then shows both generations answering, with zero dropped requests.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--transactions", type=int, default=4_000)
+    ap.add_argument("--items", type=int, default=128)
+    ap.add_argument("--avg-len", type=float, default=10.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--store", default="", metavar="DIR",
+                    help="on-disk transaction store (default: temp dir, ingested fresh)")
+    ap.add_argument("--ingest", action="store_true",
+                    help="force (re-)ingest of the synthetic DB into --store")
+    ap.add_argument("--shard-rows", type=int, default=2048)
+    ap.add_argument("--stream-chunk-rows", type=int, default=2048)
+    ap.add_argument("--min-support", type=float, default=0.02)
+    ap.add_argument("--max-k", type=int, default=4)
+    ap.add_argument("--min-confidence", type=float, default=0.4)
+    ap.add_argument("--rule-score", default="confidence", choices=["confidence", "lift"])
+    ap.add_argument("--max-rules", type=int, default=None)
+    ap.add_argument("--impl", default="auto",
+                    choices=["auto", "jnp", "pallas", "pallas_interpret"])
+    # gateway policy
+    ap.add_argument("--top-k", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait-ms", type=float, default=1.0)
+    ap.add_argument("--queue-depth", type=int, default=1024)
+    ap.add_argument("--cache", type=int, default=4096, help="basket cache capacity")
+    # client load
+    ap.add_argument("--requests", type=int, default=2_000)
+    ap.add_argument("--concurrency", type=int, default=16)
+    ap.add_argument("--hot-swap-mid-load", action="store_true",
+                    help="re-mine the store and hot-swap the rulebook at half load")
+    ap.add_argument("--swap-min-support", type=float, default=None,
+                    help="min-support of the re-mine (default: 2x --min-support)")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write the serving summary as JSON")
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.core.apriori import AprioriConfig
+    from repro.core.streaming import mine_streamed
+    from repro.data.store import ingest_quest, open_store
+    from repro.data.synthetic import QuestConfig
+    from repro.serving import AdmissionRejected, Gateway, compile_rulebook
+
+    # ---- 1. load (or ingest) the on-disk store ----
+    qcfg = QuestConfig(num_transactions=args.transactions, num_items=args.items,
+                       avg_len=args.avg_len, seed=args.seed)
+    tmp = None
+    store_dir = args.store
+    if not store_dir:
+        tmp = tempfile.TemporaryDirectory(prefix="serve_store_")
+        store_dir = tmp.name
+    if args.ingest or not os.path.exists(os.path.join(store_dir, "manifest.json")):
+        print(f"[serve] ingesting {args.transactions} x {args.items} (chunked) "
+              f"-> {store_dir} ...")
+        store = ingest_quest(qcfg, store_dir, shard_rows=args.shard_rows,
+                             chunk_rows=args.stream_chunk_rows)
+    else:
+        store = open_store(store_dir)
+    print(f"[serve] store: n={store.num_transactions} items={store.num_items} "
+          f"shards={store.num_partitions}")
+
+    # ---- 2. mine (streamed) + 3. compile ----
+    def mine_rulebook(min_support: float):
+        cfg = AprioriConfig(min_support=min_support, max_k=args.max_k,
+                            count_impl=args.impl, representation="packed")
+        t0 = time.perf_counter()
+        res = mine_streamed(store, cfg, chunk_rows=args.stream_chunk_rows)
+        rb = compile_rulebook(res, min_confidence=args.min_confidence,
+                              score=args.rule_score, max_rules=args.max_rules,
+                              num_items=store.num_items)
+        print(f"[serve] mined {res.total_frequent} itemsets -> {rb.num_rules} rules "
+              f"(min_support={min_support}) in {time.perf_counter() - t0:.2f}s")
+        return rb
+
+    rb = mine_rulebook(args.min_support)
+
+    # baskets for the client load: the store's own transactions (packed rows)
+    chunk, real = next(store.iter_chunks(min(4096, store.num_transactions)))
+    baskets = list(chunk[:real])
+
+    # ---- 4. serve loop under a closed-loop client population ----
+    import threading
+    from concurrent.futures import ThreadPoolExecutor
+
+    with Gateway(rb, impl=args.impl, top_k=args.top_k, max_batch=args.max_batch,
+                 max_wait_ms=args.max_wait_ms, queue_depth=args.queue_depth,
+                 cache_capacity=args.cache, warmup="ladder") as gw:
+        # a minimal closed-loop client, intentionally independent of
+        # benchmarks/load_gen.py: launch/ is importable as repro.launch.*
+        # and must not depend on the repo-root `benchmarks` package
+        rejected = {"n": 0}
+        latencies, generations = [], set()
+        lock = threading.Lock()
+
+        def client(indices):
+            for i in indices:
+                try:
+                    resp = gw.submit(baskets[i % len(baskets)]).result(timeout=120)
+                except AdmissionRejected:
+                    with lock:
+                        rejected["n"] += 1
+                    continue
+                with lock:
+                    latencies.append(resp.latency_s)
+                    generations.add(resp.generation)
+
+        def fire(n_requests, offset, pool):
+            shards = [range(offset + w, offset + n_requests, args.concurrency)
+                      for w in range(args.concurrency)]
+            for w in [pool.submit(client, s) for s in shards]:
+                w.result()
+
+        half = args.requests // 2
+        print(f"[serve] firing {args.requests} requests from {args.concurrency} "
+              f"closed-loop clients ...")
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=args.concurrency) as pool:
+            if args.hot_swap_mid_load:
+                # re-mine WHILE the first half of the load is live, swap,
+                # then drive the rest against the new generation
+                swap_ms = (2 * args.min_support if args.swap_min_support is None
+                           else args.swap_min_support)
+                rb2_box = {}
+                miner = threading.Thread(
+                    target=lambda: rb2_box.update(rb=mine_rulebook(swap_ms)))
+                miner.start()
+                fire(half, 0, pool)
+                miner.join()
+                gen = gw.hot_swap(rb2_box["rb"])
+                print(f"[serve] hot-swapped to generation {gen} with traffic live")
+                fire(args.requests - half, half, pool)
+            else:
+                fire(args.requests, 0, pool)
+        wall = time.perf_counter() - t0
+
+        stats = gw.stats()
+
+    lat = np.asarray(sorted(latencies))
+    pct = lambda q: float(np.percentile(lat, q)) * 1e3 if lat.size else 0.0
+    summary = {
+        "requests": args.requests,
+        "responses": int(lat.size),
+        "rejected": rejected["n"],
+        "generations": sorted(int(g) for g in generations),
+        "qps": lat.size / wall if wall > 0 else 0.0,
+        "p50_ms": pct(50), "p95_ms": pct(95), "p99_ms": pct(99),
+        "batch_occupancy": stats["batch_occupancy"],
+        "cache_hit_rate": stats["cache_hit_rate"],
+        "swaps": stats["swaps"],
+        "wall_s": wall,
+    }
+    print(f"[serve] {summary['responses']} responses (+{summary['rejected']} rejected) "
+          f"in {wall:.2f}s = {summary['qps']:,.0f} qps | "
+          f"p50={summary['p50_ms']:.2f}ms p95={summary['p95_ms']:.2f}ms "
+          f"p99={summary['p99_ms']:.2f}ms | occupancy={summary['batch_occupancy']:.2f} "
+          f"hit_rate={summary['cache_hit_rate']:.2f} | generations={summary['generations']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"[serve] wrote {args.json}", file=sys.stderr)
+    if tmp is not None:
+        tmp.cleanup()
+
+
+if __name__ == "__main__":
+    main()

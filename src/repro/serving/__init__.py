@@ -1,5 +1,16 @@
-from repro.serving.serve_loop import make_prefill_step, make_decode_step, generate
-from repro.serving.rulebook import Rulebook, compile_rulebook, place_rulebook
+"""The Apriori serving stack: rulebook -> batch engine -> online gateway.
+
+Public surface (DESIGN.md §8/§10): compile/load a :class:`Rulebook`, answer
+pre-assembled batches with :func:`recommend`, or serve independent online
+queries through a :class:`Gateway` (micro-batching, exact-basket cache,
+live rulebook hot-swap). The LM-era decode loop lives on only as the
+unexported ``repro.serving.serve_loop`` module.
+"""
+
+from repro.serving.batcher import AdmissionRejected, MicroBatcher, Request
+from repro.serving.cache import BasketCache, basket_key
+from repro.serving.gateway import Gateway, Response, pow2_bucket
+from repro.serving.metrics import GatewayMetrics, LatencyHistogram
 from repro.serving.recommend import (
     RecommendResult,
     make_match_step,
@@ -7,3 +18,4 @@ from repro.serving.recommend import (
     recommend,
     recommend_python,
 )
+from repro.serving.rulebook import Rulebook, compile_rulebook, place_rulebook

@@ -1,0 +1,168 @@
+"""Micro-batching request scheduler for the serving gateway (DESIGN.md §10).
+
+Concurrently arriving single-basket queries land in ONE bounded queue; a
+single worker thread pops the oldest request, then coalesces everything that
+is already queued — waiting at most ``max_wait_ms`` for stragglers — into a
+batch of at most ``max_batch``, and hands it (grouped by ``top_k``, arrival
+order preserved) to the gateway's dispatch function, which pads to the
+power-of-two jit bucket and demultiplexes per-request futures.
+
+``max_wait_ms = 0`` is the pure **greedy** policy: a lone request dispatches
+immediately (no artificial latency floor), while a busy device back-builds
+batches naturally because the queue fills during the previous dispatch —
+the batching/throughput trade Singh et al. measure at the *job scheduling*
+layer of MapReduce-Apriori, transplanted to the query side.
+
+Backpressure is explicit: a full queue raises :class:`AdmissionRejected` at
+``submit`` (counted in metrics) — overload degrades by refusing admission,
+never by silently dropping an accepted request. A dispatch that throws
+resolves every future in the group with that exception for the same reason.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+_SENTINEL = object()
+
+
+class AdmissionRejected(RuntimeError):
+    """The gateway refused the request at admission (bounded-queue overload
+    or shutdown). ``reason`` says which."""
+
+    def __init__(self, reason: str):
+        super().__init__(f"request rejected: {reason}")
+        self.reason = reason
+
+
+@dataclasses.dataclass
+class Request:
+    """One admitted basket query travelling through the batcher."""
+
+    packed: np.ndarray        # (W,) uint32 basket bitset row
+    top_k: int
+    future: Future            # resolves to a gateway Response
+    t_submit: float           # perf_counter at admission (latency accounting)
+
+
+class MicroBatcher:
+    """Bounded-queue scheduler: one worker thread, coalesced dispatches."""
+
+    def __init__(
+        self,
+        dispatch_fn,
+        *,
+        max_batch: int = 64,
+        max_wait_ms: float = 1.0,
+        queue_depth: int = 1024,
+        metrics=None,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self._dispatch_fn = dispatch_fn
+        self._max_batch = int(max_batch)
+        self._max_wait_s = max(0.0, float(max_wait_ms)) / 1e3
+        self._metrics = metrics
+        self._q: queue.Queue = queue.Queue(maxsize=int(queue_depth))
+        self._closed = False
+        # serializes (closed check + enqueue) against (close + sentinel):
+        # an admitted request is always queued AHEAD of the sentinel, so the
+        # worker is guaranteed to reach it — admitted ⇒ resolved
+        self._admit_lock = threading.Lock()
+        self._worker = threading.Thread(target=self._run, name="gateway-batcher", daemon=True)
+        self._worker.start()
+
+    @property
+    def depth(self) -> int:
+        """Requests currently queued (admission-pressure signal)."""
+        return self._q.qsize()
+
+    def submit(self, request: Request) -> None:
+        """Admit one request or raise :class:`AdmissionRejected`."""
+        with self._admit_lock:
+            if self._closed:
+                self._reject("gateway closed")
+            try:
+                self._q.put_nowait(request)
+            except queue.Full:
+                self._reject("admission queue full")
+        if self._metrics is not None:
+            self._metrics.record_admission(True)
+
+    def _reject(self, reason: str):
+        if self._metrics is not None:
+            self._metrics.record_admission(False)
+        raise AdmissionRejected(reason)
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        """Stop admitting, flush every already-admitted request, join.
+
+        The admit lock makes close/submit race-free: the sentinel is
+        enqueued strictly after every admitted request, so the worker flushes
+        all of them before exiting — no admitted future is ever left hanging.
+        """
+        with self._admit_lock:
+            if self._closed:
+                return
+            self._closed = True
+            # blocking put is safe: the worker keeps draining ahead of it,
+            # and submitters blocked on the lock will see _closed afterwards
+            self._q.put(_SENTINEL)
+        self._worker.join(timeout=timeout)
+
+    # ------------------------------------------------------------- worker --
+    def _run(self) -> None:
+        stop = False
+        while not stop:
+            item = self._q.get()
+            if item is _SENTINEL:
+                break
+            batch = [item]
+            deadline = time.perf_counter() + self._max_wait_s
+            while len(batch) < self._max_batch:
+                remaining = deadline - time.perf_counter()
+                try:
+                    # past the deadline we still drain whatever is already
+                    # queued (free batching), we just stop *waiting*
+                    nxt = self._q.get_nowait() if remaining <= 0 else self._q.get(timeout=remaining)
+                except queue.Empty:
+                    break
+                if nxt is _SENTINEL:
+                    stop = True
+                    break
+                batch.append(nxt)
+            self._dispatch_batch(batch)
+        # defensive flush: the admit lock orders every admitted request
+        # ahead of the sentinel, so this drain should always be empty
+        tail = []
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if item is not _SENTINEL:
+                tail.append(item)
+        for start in range(0, len(tail), self._max_batch):
+            self._dispatch_batch(tail[start : start + self._max_batch])
+
+    def _dispatch_batch(self, batch: list) -> None:
+        """Group by top_k (jit-static in the top-k step) and dispatch; a
+        throwing dispatch fails its group's futures, never drops them."""
+        groups: dict[int, list] = {}
+        for r in batch:
+            groups.setdefault(r.top_k, []).append(r)
+        for group in groups.values():
+            try:
+                self._dispatch_fn(group)
+            except BaseException as e:  # noqa: BLE001 — must reach the futures
+                for r in group:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+                        if self._metrics is not None:
+                            self._metrics.record_response(0.0, failed=True)

@@ -1,0 +1,308 @@
+"""Online serving gateway: queue → bucketizer → match step → demux (§10).
+
+The gateway turns the batch engine (`serving/recommend.py`) into an online
+query service. Independent clients call :meth:`Gateway.submit` (or the
+blocking :meth:`Gateway.query`) with ONE basket each; the micro-batcher
+(`serving/batcher.py`) coalesces concurrent arrivals, the gateway pads each
+coalesced group to a power-of-two jit bucket, runs the SAME cached match
+step + top-k step the batch engine uses — so a gateway response is
+bit-identical to a direct :func:`~repro.serving.recommend.recommend` call
+against the answering rulebook — and demultiplexes per-request
+:class:`Response` futures.
+
+**Generations + hot-swap.** The servable rulebook is wrapped in an immutable
+generation record ``(generation id, device-placed rulebook)`` behind a single
+reference. :meth:`hot_swap` device-places and warm-compiles the incoming
+rulebook FIRST (double-buffered: both generations resident), then replaces
+the reference — one atomic store. Every dispatch grabs the reference exactly
+once, so a batch is answered wholly by one generation and every
+:class:`Response` carries the ``generation`` that answered it; in-flight and
+queued requests are never dropped by a swap, they simply resolve against
+whichever generation their dispatch grabbed. The old generation's device
+arrays free when the last in-flight batch referencing them completes.
+
+**Cache.** An exact-basket LRU (`serving/cache.py`) keyed on
+``(packed words, top_k, generation)`` answers repeat baskets without
+queueing; the generation in the key makes stale hits impossible after a
+swap. All counters land in `serving/metrics.py`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.core import itemsets as enc
+from repro.serving.batcher import AdmissionRejected, MicroBatcher, Request
+from repro.serving.cache import BasketCache, basket_key
+from repro.serving.metrics import GatewayMetrics
+from repro.serving.recommend import _cached_match_step, _topk_items, pack_baskets
+from repro.serving.rulebook import Rulebook, place_rulebook
+
+
+@dataclasses.dataclass
+class Response:
+    """One answered basket query."""
+
+    items: np.ndarray      # (top_k,) int32 recommended item ids
+    scores: np.ndarray     # (top_k,) float32 evidence (-inf = beyond scoreable)
+    generation: int        # rulebook generation that answered
+    cached: bool           # served from the exact-basket cache
+    latency_s: float       # submit -> response
+    bucket: int            # padded jit bucket of the answering dispatch: the
+                           # response is bit-identical to recommend(...,
+                           # batch_size=bucket) against this generation (§10)
+
+
+class _Generation:
+    """Immutable (id, device-placed rulebook) pair — the swap unit."""
+
+    __slots__ = ("generation", "rulebook")
+
+    def __init__(self, generation: int, rulebook: Rulebook):
+        self.generation = generation
+        self.rulebook = rulebook
+
+
+def pow2_bucket(n: int, max_batch: int, multiple: int = 1) -> int:
+    """Smallest power-of-two >= n (clamped to max_batch), rounded up to
+    ``multiple`` (the data-shard count on a mesh) — the jit bucket ladder:
+    O(log max_batch) compiled shapes regardless of arrival pattern."""
+    if n < 1 or n > max_batch:
+        raise ValueError(f"batch of {n} outside [1, {max_batch}]")
+    b = 1 << (n - 1).bit_length()
+    b = min(b, max_batch)
+    b = max(b, n)                       # max_batch itself may not be a pow2
+    return ((b + multiple - 1) // multiple) * multiple
+
+
+class Gateway:
+    """Micro-batched online query service over a hot-swappable rulebook."""
+
+    def __init__(
+        self,
+        rulebook: Rulebook,
+        *,
+        mesh=None,
+        impl: str = "auto",
+        top_k: int = 10,
+        exclude_basket: bool = True,
+        max_batch: int = 64,
+        max_wait_ms: float = 1.0,
+        queue_depth: int = 1024,
+        cache_capacity: int = 4096,
+        data_axes: tuple = ("data",),
+        rule_axis: str = "model",
+        block_n: int = 256,
+        block_k: int = 256,
+        warmup: bool | str = True,
+    ):
+        """``warmup``: ``True`` compiles the bucket-ladder endpoints
+        (1 and ``max_batch``) per generation before it serves; ``"ladder"``
+        compiles every power-of-two bucket (no mid-load jit spikes at all);
+        ``False`` compiles lazily on first use."""
+        self.num_items = rulebook.num_items
+        self.default_top_k = min(top_k, self.num_items)
+        self.exclude_basket = exclude_basket
+        self.max_batch = int(max_batch)
+        self._words = enc.packed_words(self.num_items)
+        self._mesh = mesh
+        self._rule_axis = rule_axis
+        self._warmup_enabled = warmup
+        self._closed = False
+
+        if mesh is None:
+            self._row_multiple = 1
+            self._basket_sharding = None
+        else:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            self._row_multiple = math.prod(mesh.shape[a] for a in data_axes)
+            self._basket_sharding = NamedSharding(mesh, P(tuple(data_axes), None))
+        # the SAME lru-cached step recommend() uses: gateway and batch engine
+        # share one jit entry per (mesh, impl, axes, blocks)
+        self._step = _cached_match_step(mesh, impl, tuple(data_axes), rule_axis, block_n, block_k)
+
+        self.metrics = GatewayMetrics()
+        self.cache = BasketCache(cache_capacity)
+        self._swap_lock = threading.Lock()
+        self._generation = self._place(0, rulebook)
+        if warmup:
+            self._warm(self._generation)
+        self._batcher = MicroBatcher(
+            self._dispatch,
+            max_batch=max_batch,
+            max_wait_ms=max_wait_ms,
+            queue_depth=queue_depth,
+            metrics=self.metrics,
+        )
+
+    # ---------------------------------------------------------- lifecycle --
+    def close(self) -> None:
+        """Stop admitting; every already-admitted request still resolves."""
+        self._closed = True
+        self._batcher.close()
+
+    def __enter__(self) -> "Gateway":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    # ----------------------------------------------------------- requests --
+    def submit(self, basket, top_k: int | None = None):
+        """Admit one basket query; returns a Future[:class:`Response`].
+
+        ``basket``: item-id list/tuple/1-D int array, or a pre-packed (W,)
+        uint32 bitset row. Raises :class:`AdmissionRejected` when the queue
+        is full or the gateway is closed — overload is reported, not
+        silently dropped.
+        """
+        if self._closed:
+            self.metrics.record_admission(False)
+            raise AdmissionRejected("gateway closed")
+        k = min(self.default_top_k if top_k is None else int(top_k), self.num_items)
+        packed = self._pack_one(basket)
+        t0 = time.perf_counter()
+
+        gen = self._generation
+        hit = self.cache.get(basket_key(packed, k, gen.generation), count=False)
+        if hit is not None:
+            items, scores, answered_by, bucket = hit
+            latency = time.perf_counter() - t0
+            self.cache.record(True)
+            self.metrics.record_cache(True)
+            self.metrics.record_admission(True)
+            self.metrics.record_response(latency)
+            fut = Future()
+            fut.set_result(Response(items, scores, answered_by, True, latency, bucket))
+            return fut
+
+        req = Request(packed=packed, top_k=k, future=Future(), t_submit=t0)
+        self._batcher.submit(req)   # raises AdmissionRejected on overload
+        # hit/miss is counted only for admitted requests, and on BOTH the
+        # cache's and the gateway metrics' counters — the two published
+        # hit-rates agree, and cache_hits + cache_misses == submitted
+        self.cache.record(False)
+        self.metrics.record_cache(False)
+        return req.future
+
+    def query(self, basket, top_k: int | None = None, timeout: float | None = 60.0) -> Response:
+        """Blocking convenience wrapper: ``submit(...).result(timeout)``."""
+        return self.submit(basket, top_k).result(timeout)
+
+    # ----------------------------------------------------------- hot-swap --
+    def hot_swap(self, rulebook: Rulebook) -> int:
+        """Atomically replace the serving rulebook; returns the new
+        generation id. The incoming rulebook is device-placed and (when
+        ``warmup``) compiled against the bucket ladder BEFORE the pointer
+        swap, so requests never stall on it; requests already dispatched or
+        queued resolve normally — a response's ``generation`` says which
+        rulebook answered.
+        """
+        if rulebook.num_items != self.num_items:
+            raise ValueError(
+                f"hot-swap rulebook has {rulebook.num_items} items, gateway "
+                f"serves {self.num_items} — vocabulary must be stable across swaps"
+            )
+        with self._swap_lock:
+            gen = self._place(self._generation.generation + 1, rulebook)
+            if self._warmup_enabled:
+                self._warm(gen)          # double-buffer: compile before swap
+            self._generation = gen       # the atomic store
+            self.metrics.record_swap()
+            return gen.generation
+
+    @property
+    def generation(self) -> int:
+        """Current serving generation id."""
+        return self._generation.generation
+
+    def stats(self) -> dict:
+        gen = self._generation
+        out = self.metrics.snapshot()
+        out["generation"] = gen.generation
+        out["num_rules"] = gen.rulebook.num_rules
+        out["queue_depth"] = self._batcher.depth
+        out["cache"] = self.cache.snapshot()
+        return out
+
+    # ----------------------------------------------------------- internals --
+    def _pack_one(self, basket) -> np.ndarray:
+        """A 1-D uint32 array of exactly ``W`` words is the pre-packed form
+        (how store rows arrive); every other sequence is an item-id list.
+        The collision — uint32 *item ids* that happen to number exactly W —
+        is unresolvable from the value alone, so submit id lists as plain
+        Python ints / signed arrays, never uint32."""
+        if (isinstance(basket, np.ndarray) and basket.ndim == 1
+                and basket.dtype == np.uint32 and basket.shape[0] == self._words):
+            return np.ascontiguousarray(basket)
+        return pack_baskets([list(np.asarray(basket, dtype=np.int64))], self.num_items)[0]
+
+    def _place(self, generation: int, rulebook: Rulebook) -> _Generation:
+        import jax
+
+        if not isinstance(rulebook.ante_packed, jax.Array):
+            rulebook = place_rulebook(rulebook, self._mesh, self._rule_axis)
+        return _Generation(generation, rulebook)
+
+    def _warm(self, gen: _Generation) -> None:
+        """Compile jit buckets for this generation's rule count (jit keys on
+        the rulebook row count) off the serving path: the ladder endpoints,
+        or with ``warmup="ladder"`` every power-of-two bucket."""
+        if self._warmup_enabled == "ladder":
+            ns = {1 << p for p in range(self.max_batch.bit_length())
+                  if 1 << p <= self.max_batch} | {self.max_batch}
+        else:
+            ns = {1, self.max_batch}
+        for n in sorted(ns):
+            bucket = pow2_bucket(n, self.max_batch, self._row_multiple)
+            self._match(np.zeros((bucket, self._words), np.uint32), gen, self.default_top_k)
+
+    def _match(self, b: np.ndarray, gen: _Generation, top_k: int):
+        """Pad-free core: run one padded bucket through match + top-k."""
+        import jax
+        import jax.numpy as jnp
+
+        rb = gen.rulebook
+        if self._basket_sharding is not None:
+            b_dev = jax.device_put(b, self._basket_sharding)
+        else:
+            b_dev = jnp.asarray(b)
+        item_scores = self._step(b_dev, rb.ante_packed, rb.ante_len, rb.cons_packed, rb.scores)
+        idx, vals = _topk_items(
+            item_scores, b_dev,
+            top_k=top_k, exclude_basket=self.exclude_basket, num_items=self.num_items,
+        )
+        return np.asarray(idx), np.asarray(vals)
+
+    def _dispatch(self, group: list) -> None:
+        """Batcher callback: one coalesced same-top_k group -> responses.
+
+        The generation reference is read ONCE per dispatch — the whole batch
+        is answered by a single rulebook, so responses can never mix
+        generations within a batch."""
+        gen = self._generation
+        k = group[0].top_k
+        bucket = pow2_bucket(len(group), self.max_batch, self._row_multiple)
+        b = np.zeros((bucket, self._words), np.uint32)
+        for i, r in enumerate(group):
+            b[i] = r.packed
+        idx, vals = self._match(b, gen, k)
+        self.metrics.record_batch(len(group), bucket)
+        now = time.perf_counter()
+        for i, r in enumerate(group):
+            items, scores = idx[i], vals[i]
+            self.cache.put(
+                basket_key(r.packed, k, gen.generation),
+                (items, scores, gen.generation, bucket),
+            )
+            latency = now - r.t_submit
+            self.metrics.record_response(latency)
+            r.future.set_result(Response(items, scores, gen.generation, False, latency, bucket))

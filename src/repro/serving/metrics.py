@@ -1,0 +1,162 @@
+"""Serving-side observability: latency histograms + gateway counters (§10).
+
+The gateway records every request into a :class:`GatewayMetrics` — admission
+(submitted / rejected), cache hits vs misses, per-dispatch batch occupancy
+(real rows vs the padded jit bucket), rulebook swaps, and end-to-end request
+latency into a :class:`LatencyHistogram`. ``snapshot()`` returns one plain
+dict (JSON-able) with p50/p95/p99 so the load harness, the serve CLI and CI
+gates all read the same numbers.
+
+The histogram is log-bucketed (geometric ``GROWTH``-spaced edges from 1 µs):
+recording is O(1) and lock-cheap, quantiles are resolved to a bucket's upper
+edge — a conservative ≤ ``GROWTH``-factor overestimate, never an
+underestimate, which is the right bias for latency SLO gates.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+
+_FLOOR_S = 1e-6    # first bucket edge: 1 us
+_GROWTH = 1.25
+_NUM_BUCKETS = 96  # 1us * 1.25**95 ~= 1.6e3 s: covers any sane request
+_LOG_GROWTH = math.log(_GROWTH)
+
+
+class LatencyHistogram:
+    """Log-bucketed latency histogram with exact count/sum/min/max."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counts = [0] * _NUM_BUCKETS
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = 0.0
+
+    @staticmethod
+    def _bucket(seconds: float) -> int:
+        if seconds <= _FLOOR_S:
+            return 0
+        return min(_NUM_BUCKETS - 1, 1 + int(math.log(seconds / _FLOOR_S) / _LOG_GROWTH))
+
+    @staticmethod
+    def _edge(bucket: int) -> float:
+        """Upper edge of ``bucket`` in seconds: bucket b holds samples in
+        ``[FLOOR·GROWTH^(b-1), FLOOR·GROWTH^b)`` (bucket 0: everything ≤ FLOOR)."""
+        return _FLOOR_S * _GROWTH**bucket
+
+    def record(self, seconds: float) -> None:
+        seconds = max(0.0, float(seconds))
+        with self._lock:
+            self._counts[self._bucket(seconds)] += 1
+            self.count += 1
+            self.sum += seconds
+            self.min = min(self.min, seconds)
+            self.max = max(self.max, seconds)
+
+    def quantile(self, q: float) -> float:
+        """Latency (seconds) at quantile ``q`` in (0, 1]: the upper edge of
+        the bucket holding the ceil(q·count)-th sample; 0.0 when empty."""
+        with self._lock:
+            if self.count == 0:
+                return 0.0
+            target = max(1, math.ceil(q * self.count))
+            cum = 0
+            for b, c in enumerate(self._counts):
+                cum += c
+                if cum >= target:
+                    return min(self._edge(b), self.max)
+            return self.max
+
+    def snapshot(self) -> dict:
+        return {
+            "count": self.count,
+            "mean_ms": (self.sum / self.count * 1e3) if self.count else 0.0,
+            "min_ms": (self.min * 1e3) if self.count else 0.0,
+            "max_ms": self.max * 1e3,
+            "p50_ms": self.quantile(0.50) * 1e3,
+            "p95_ms": self.quantile(0.95) * 1e3,
+            "p99_ms": self.quantile(0.99) * 1e3,
+        }
+
+
+class GatewayMetrics:
+    """All gateway counters + the request-latency histogram, one lock."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.latency = LatencyHistogram()
+        self.submitted = 0       # admitted into the queue (or served from cache)
+        self.rejected = 0        # refused at admission (queue full / closed)
+        self.completed = 0       # responses delivered (cache hits included)
+        self.failed = 0          # futures resolved with an exception
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.swaps = 0
+        self.batches = 0         # dispatches through the match step
+        self.batch_rows_real = 0     # requests actually in dispatched batches
+        self.batch_rows_padded = 0   # rows of the padded jit buckets
+
+    def record_admission(self, accepted: bool) -> None:
+        with self._lock:
+            if accepted:
+                self.submitted += 1
+            else:
+                self.rejected += 1
+
+    def record_cache(self, hit: bool) -> None:
+        with self._lock:
+            if hit:
+                self.cache_hits += 1
+            else:
+                self.cache_misses += 1
+
+    def record_batch(self, real_rows: int, padded_rows: int) -> None:
+        with self._lock:
+            self.batches += 1
+            self.batch_rows_real += real_rows
+            self.batch_rows_padded += padded_rows
+
+    def record_response(self, latency_s: float, failed: bool = False) -> None:
+        with self._lock:
+            if failed:
+                self.failed += 1
+            else:
+                self.completed += 1
+        if not failed:
+            self.latency.record(latency_s)
+
+    def record_swap(self) -> None:
+        with self._lock:
+            self.swaps += 1
+
+    @property
+    def batch_occupancy(self) -> float:
+        """Real rows / padded bucket rows over all dispatches (1.0 = full)."""
+        return self.batch_rows_real / self.batch_rows_padded if self.batch_rows_padded else 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            out = {
+                "submitted": self.submitted,
+                "rejected": self.rejected,
+                "completed": self.completed,
+                "failed": self.failed,
+                "cache_hits": self.cache_hits,
+                "cache_misses": self.cache_misses,
+                "swaps": self.swaps,
+                "batches": self.batches,
+                "batch_rows_real": self.batch_rows_real,
+                "batch_rows_padded": self.batch_rows_padded,
+            }
+        out["batch_occupancy"] = self.batch_occupancy
+        out["cache_hit_rate"] = self.cache_hit_rate
+        out["latency"] = self.latency.snapshot()
+        return out
