@@ -5,6 +5,13 @@ results against the in-memory miner, reporting peak host RSS for both.
 
 python examples/mine_out_of_core.py [--transactions N] [--items I]
                                     [--chunk-rows C] [--min-support S]
+                                    [--kill-resume]
+
+``--kill-resume`` adds the fault-tolerance walkthrough (DESIGN.md §11): the
+same store is mined in a CHILD process with mid-level checkpointing enabled,
+the child is ``kill -9``'d at its first mid-level commit, and a resumed mine
+restores the snapshot and finishes — asserted dict-identical to the
+uninterrupted streamed result.
 
 Exits non-zero if streamed and in-memory results differ — CI runs this as
 the out-of-core smoke (DESIGN.md §9).
@@ -14,8 +21,35 @@ import argparse
 import os
 import resource
 import shutil
+import subprocess
+import sys
 import tempfile
 import time
+
+
+def _child_kill(store_dir, cfg, chunk_rows, every):
+    """Child mode: mine with checkpoints, SIGKILL at the first mid-level
+    commit — a real node loss, no atexit, no finally."""
+    import signal
+
+    from repro.core.streaming import mine_streamed
+    from repro.data.store import open_store
+    from repro.distributed.checkpoint import MiningCheckpoint
+
+    store = open_store(store_dir)
+
+    class Killing(MiningCheckpoint):
+        def save(self, state, sfp, mfp):
+            seq = super().save(state, sfp, mfp)
+            if state.mid_level and state.next_k >= 2:
+                self.wait()                 # snapshot committed; now "die"
+                os.kill(os.getpid(), signal.SIGKILL)
+            return seq
+
+    mine_streamed(store, cfg, chunk_rows=chunk_rows,
+                  checkpoint=Killing(store.checkpoint_path),
+                  checkpoint_every_chunks=every)
+    raise SystemExit("unreachable: the SIGKILL above must have fired")
 
 
 def rss_mb() -> float:
@@ -33,6 +67,11 @@ def main():
     ap.add_argument("--max-k", type=int, default=4)
     ap.add_argument("--keep-store", default="", metavar="DIR",
                     help="ingest here and keep it (default: temp dir, removed)")
+    ap.add_argument("--kill-resume", action="store_true",
+                    help="also run the kill -9 / resume cycle (DESIGN.md §11)")
+    ap.add_argument("--checkpoint-every", type=int, default=4, metavar="CHUNKS",
+                    help="mid-level checkpoint cadence of the kill-resume cycle")
+    ap.add_argument("--_child-kill", default="", help=argparse.SUPPRESS)
     args = ap.parse_args()
 
     from repro.core.apriori import AprioriConfig, mine
@@ -44,6 +83,10 @@ def main():
                        avg_len=10, seed=7)
     cfg = AprioriConfig(min_support=args.min_support, max_k=args.max_k,
                         count_impl="jnp", representation="packed")
+
+    if args._child_kill:
+        _child_kill(args._child_kill, cfg, args.chunk_rows, args.checkpoint_every)
+        return
 
     store_dir = args.keep_store or tempfile.mkdtemp(prefix="quest_store_")
     try:
@@ -85,6 +128,36 @@ def main():
         assert streamed.min_count == inmem.min_count
         print("OUT_OF_CORE_OK — streamed, streamed-SON and in-memory results "
               "are dict-identical")
+
+        # --- 5. (optional) kill -9 mid-mine, resume from the checkpoint ----
+        if args.kill_resume:
+            from repro.distributed.checkpoint import MiningCheckpoint
+
+            t0 = time.time()
+            child = subprocess.run(
+                [sys.executable, os.path.abspath(__file__),
+                 "--_child-kill", store_dir,
+                 "--chunk-rows", str(args.chunk_rows),
+                 "--min-support", str(args.min_support),
+                 "--max-k", str(args.max_k),
+                 "--checkpoint-every", str(args.checkpoint_every)],
+                capture_output=True, text=True, timeout=600, env=dict(os.environ),
+            )
+            assert child.returncode == -9, (
+                f"child should die by SIGKILL, got rc={child.returncode}\n"
+                f"{child.stderr[-2000:]}")
+            snap, _ = MiningCheckpoint(store.checkpoint_path).load_latest()
+            print(f"kill -9'd the child mid-level ({time.time()-t0:.2f}s): "
+                  f"committed snapshot at level {snap.next_k}, "
+                  f"{snap.chunks_done} chunks folded")
+            t0 = time.time()
+            resumed = mine_streamed(store, cfg, chunk_rows=args.chunk_rows,
+                                    checkpoint=True,
+                                    checkpoint_every_chunks=args.checkpoint_every,
+                                    resume=True)
+            assert resumed.as_dict() == streamed.as_dict(), "resumed != streamed"
+            print(f"resume: {time.time()-t0:.2f}s — KILL_RESUME_OK, resumed "
+                  "mine is dict-identical to the uninterrupted one")
     finally:
         if not args.keep_store:
             shutil.rmtree(store_dir, ignore_errors=True)

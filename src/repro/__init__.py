@@ -1,15 +1,14 @@
 """repro — Map/Reduce Apriori (ACIJ 2012) as a production JAX/TPU framework.
 
 Layers:
-  core/         the paper's contribution: distributed level-wise Apriori
-  data/         transaction + token pipelines
-  kernels/      Pallas TPU kernels (support counting, flash attention)
-  models/       assigned-architecture LM zoo (pure JAX)
-  configs/      one config per assigned architecture
-  distributed/  sharding rules, checkpointing, fault tolerance, compression
-  training/     optimizer + train step
-  serving/      KV/state caches + decode step
-  launch/       mesh, dry-run, drivers
+  core/         the paper's contribution: distributed level-wise Apriori,
+                SON two-phase mining, streamed out-of-core driver, rules
+  data/         transaction pipelines + the on-disk shard store
+  kernels/      Pallas TPU kernels (support counting, rule matching)
+  distributed/  fault tolerance: mining checkpoints, retryable partitions,
+                serving supervision
+  serving/      rulebook -> batch engine -> online gateway
+  launch/       mesh, dry-run, mine/serve drivers
 """
 
 __version__ = "1.0.0"

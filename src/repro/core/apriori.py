@@ -58,11 +58,17 @@ class AprioriConfig:
 
 @dataclasses.dataclass
 class AprioriResult:
-    """k -> (itemsets (F_k, k) int32, supports (F_k,) int64)."""
+    """k -> (itemsets (F_k, k) int32, supports (F_k,) int64).
+
+    ``fault_report`` is populated only by the fault-tolerant SON executor
+    (``streaming.mine_son_streamed(fault=...)``): what the retrying work
+    queue actually did — retries, speculative copies, skipped partitions.
+    """
 
     levels: dict
     num_transactions: int
     min_count: int
+    fault_report: object | None = dataclasses.field(default=None, compare=False)
 
     def frequent(self, k: int) -> np.ndarray:
         return self.levels[k][0] if k in self.levels else np.zeros((0, k), np.int32)
@@ -226,11 +232,19 @@ def run_level_loop(
 ) -> AprioriResult:
     """The driver's level loop, abstracted over HOW candidates are counted.
 
-    ``count_fn(cand_sets (K, k) int32) -> supports (K,) int``. Candidate
+    ``count_fn(cand_sets (K, k) int32, level_k) -> supports (K,) int``. The
+    level index lets a counting backend carry per-level resume state (the
+    streamed driver's mid-level chunk cursor, DESIGN.md §11). Candidate
     generation, min-support pruning, checkpointing and termination live
     here — ``mine`` (whole DB device-resident) and
     ``core.streaming.mine_streamed`` (per-level chunk streaming over an
     on-disk store) both instantiate it, so the two drivers cannot drift.
+
+    Determinism contract: given the same DB and config, the candidate array
+    passed to ``count_fn`` for level k is a pure function of F_{k-1}
+    (``generate_candidates`` is np.unique-canonical) — which is what lets a
+    resumed mine regenerate the in-progress level's candidates instead of
+    persisting them.
     """
     min_count = max(1, math.ceil(cfg.min_support * n))
     levels = dict(resume_state["levels"]) if resume_state else {}
@@ -239,7 +253,7 @@ def run_level_loop(
     if start_k <= 1:
         # level 1: supports of singletons — the same count path (uniform Map/Reduce)
         singles = enc.singleton_itemsets(num_items)
-        sup1 = count_fn(singles)
+        sup1 = count_fn(singles, 1)
         keep = sup1 >= min_count
         levels[1] = (singles[keep], sup1[keep])
         if checkpoint_cb:
@@ -259,7 +273,7 @@ def run_level_loop(
             cands = cand_mod.generate_candidates(prev_sets)
         if cands.shape[0] == 0:
             break
-        sup = count_fn(cands)
+        sup = count_fn(cands, k)
         keep = sup >= min_count
         if not keep.any():
             break
@@ -291,7 +305,7 @@ def mine(
     t_dev = place_db(t_np, cfg, mesh)
     count_step = make_count_step(mesh, cfg)
 
-    def count_fn(cand_sets):
+    def count_fn(cand_sets, level_k):
         return _count_level(count_step, t_dev, cand_sets, num_items, cfg, mesh)
 
     return run_level_loop(count_fn, n, num_items, cfg, checkpoint_cb, resume_state)

@@ -4,8 +4,8 @@ The paper's Hadoop pipeline is:  map over HDFS partitions -> local combine ->
 hash shuffle -> reduce per key.  On a TPU mesh the key space is dense (tensor
 indices), so the shuffle+reduce degenerates to a single ``lax.psum`` (or
 pmax/pmin) over the data axes — see DESIGN.md §2.  This module is the reusable
-engine; ``core.apriori`` instantiates it for support counting and
-``training.train_loop`` reuses :func:`hierarchical_psum` for gradients.
+engine; ``core.apriori`` instantiates it for support counting, and
+:func:`hierarchical_psum` models the paper's rack-local combiner tier.
 """
 
 from __future__ import annotations
@@ -105,7 +105,7 @@ def hierarchical_psum(
 ) -> Any:
     """Two-level reduction: psum within ``inner_axes`` (fast ICI), then over
     ``outer_axes`` (slow DCN), optionally transforming the payload for the
-    outer hop (e.g. int8 error-feedback compression, distributed/compression.py).
+    outer hop (e.g. quantizing partial counts before the cross-pod hop).
 
     Must be called inside a shard_map body.
     """

@@ -44,21 +44,42 @@ def _mine_local(t_np: np.ndarray, min_count: int, cfg: ap.AprioriConfig) -> dict
     return res.levels
 
 
+def local_winners(partition_dense, cfg: ap.AprioriConfig) -> dict:
+    """One partition's phase-1 map output: its locally frequent itemsets at
+    the partition-scaled threshold, as ``k -> set of itemset tuples``.
+
+    This is the unit the fault-tolerant executor re-runs: it is a pure
+    function of (partition data, cfg), so re-executing a lost mapper from
+    its re-read shard yields the identical output — Hadoop's task
+    re-execution contract (DESIGN.md §11)."""
+    part = np.asarray(partition_dense, dtype=np.int8)
+    if part.shape[0] == 0:
+        return {}
+    local_min = max(1, math.ceil(cfg.min_support * part.shape[0]))
+    return {
+        k: {tuple(int(x) for x in row) for row in sets}
+        for k, (sets, _) in _mine_local(part, local_min, cfg).items()
+    }
+
+
+def merge_winners(winner_dicts) -> dict:
+    """The phase-1 reduce: union per-partition winner dicts per level.
+    Order-independent (set union), so it is insensitive to the completion
+    order of a retrying/speculating executor."""
+    union: dict[int, set] = {}
+    for w in winner_dicts:
+        for k, s in w.items():
+            union.setdefault(k, set()).update(s)
+    return union
+
+
 def union_local_winners(partitions, cfg: ap.AprioriConfig) -> dict:
     """The phase-1 mapper over an iterable of dense partitions: mine each
     locally at the partition-scaled threshold and union the winners per
     level. Streaming-friendly — partitions are consumed one at a time, so an
     on-disk store can feed its shards without materializing the DB
     (``core.streaming.mine_son_streamed``)."""
-    union: dict[int, set] = {}
-    for part in partitions:
-        part = np.asarray(part, dtype=np.int8)
-        if part.shape[0] == 0:
-            continue
-        local_min = max(1, math.ceil(cfg.min_support * part.shape[0]))
-        for k, (sets, _) in _mine_local(part, local_min, cfg).items():
-            union.setdefault(k, set()).update(tuple(int(x) for x in row) for row in sets)
-    return union
+    return merge_winners(local_winners(part, cfg) for part in partitions)
 
 
 def mine_son(

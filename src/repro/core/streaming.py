@@ -20,6 +20,22 @@ either a real transaction or an inert zero row (DESIGN.md §3), so the
 chunk-sum equals the whole-DB count bit-for-bit — ``mine_streamed`` /
 ``mine_son_streamed`` are dict-equal to ``mine`` / ``mine_son`` at any
 chunk size.
+
+Fault tolerance (DESIGN.md §11):
+
+  * ``mine_streamed(checkpoint=..., resume=True)`` persists the driver's
+    complete state through :class:`distributed.checkpoint.MiningCheckpoint`
+    — completed levels at every level boundary, plus (every
+    ``checkpoint_every_chunks`` chunks) the mid-level pass cursor and the
+    in-progress device accumulator. Because the store's chunk iteration is
+    step-indexed and deterministic and counting is integer arithmetic,
+    folding the remaining chunks into the restored accumulator equals
+    folding all chunks into zeros: a resumed mine is dict-identical to an
+    uninterrupted one.
+  * ``mine_son_streamed(fault=FaultConfig(...))`` dispatches phase-1 shard
+    partitions through ``distributed.fault_tolerance.run_partitions`` —
+    bounded-retry re-execution plus speculative re-issue of stragglers,
+    the paper's Hadoop task-recovery story made real.
 """
 
 from __future__ import annotations
@@ -35,6 +51,14 @@ from jax.sharding import PartitionSpec as P
 from repro.core import apriori as ap
 from repro.core import son as son_mod
 from repro.data.pipeline import ShardedBatchIterator, batch_spec
+from repro.distributed.checkpoint import (
+    CheckpointMismatch,
+    MiningCheckpoint,
+    MiningState,
+    mining_fingerprint,
+    store_fingerprint,
+)
+from repro.distributed.fault_tolerance import FaultConfig, run_partitions
 
 if TYPE_CHECKING:  # import-time would cycle: data.store -> core -> streaming
     from repro.data.store import TransactionStore
@@ -56,11 +80,11 @@ def make_accum_count_step(mesh, cfg: ap.AprioriConfig) -> Callable:
     return jax.jit(step)
 
 
-def _init_acc(kp: int, cfg: ap.AprioriConfig, mesh):
-    zeros = np.zeros(kp, dtype=np.int32)
+def _init_acc(kp: int, cfg: ap.AprioriConfig, mesh, init: np.ndarray | None = None):
+    arr = np.zeros(kp, dtype=np.int32) if init is None else np.asarray(init, np.int32)
     if mesh is None:
-        return jax.numpy.asarray(zeros)
-    return jax.device_put(zeros, NamedSharding(mesh, P(cfg.model_axis)))
+        return jax.numpy.asarray(arr)
+    return jax.device_put(arr, NamedSharding(mesh, P(cfg.model_axis)))
 
 
 def _effective_chunk_rows(chunk_rows: int, cfg: ap.AprioriConfig, mesh) -> int:
@@ -74,16 +98,41 @@ def _effective_chunk_rows(chunk_rows: int, cfg: ap.AprioriConfig, mesh) -> int:
     return ((chunk_rows + shards - 1) // shards) * shards
 
 
-def _count_pass_chunks(accum_step, chunks, c_dev, len_dev, kp, cfg, mesh, prefetch):
-    """Fold every DB chunk into a fresh device accumulator; sync ONCE."""
-    acc = _init_acc(kp, cfg, mesh)
+def _count_pass_chunks(
+    accum_step,
+    chunks,
+    c_dev,
+    len_dev,
+    kp,
+    cfg,
+    mesh,
+    prefetch,
+    init_acc: np.ndarray | None = None,
+    chunks_done: int = 0,
+    save_every: int = 0,
+    save_fn: Callable | None = None,
+):
+    """Fold every DB chunk into a device accumulator; sync ONCE — unless a
+    mid-pass checkpoint cadence is set, in which case each save adds exactly
+    one extra host sync (the measured checkpoint overhead, DESIGN.md §11).
+
+    ``init_acc``/``chunks_done`` restore an interrupted pass: the caller
+    skips the already-folded chunks at the store and hands the saved
+    accumulator here; the save cadence stays aligned to ABSOLUTE chunk
+    indices so a resumed pass checkpoints at the same points.
+    """
+    acc = _init_acc(kp, cfg, mesh, init=init_acc)
+    done = chunks_done
     it = ShardedBatchIterator(chunks, mesh, batch_spec(cfg.data_axes), prefetch=prefetch)
     try:
         for t_chunk in it:
             acc = accum_step(t_chunk, c_dev, len_dev, acc)
+            done += 1
+            if save_fn is not None and save_every > 0 and done % save_every == 0:
+                save_fn(np.asarray(acc), done)
     finally:
         it.close()
-    return np.asarray(acc)   # the single host sync of this candidate pass
+    return np.asarray(acc)   # the final host sync of this candidate pass
 
 
 def count_supports_streamed(
@@ -113,26 +162,85 @@ def count_supports_streamed(
 
 
 def _count_level_streamed(
-    accum_step, store, cand_sets, num_items, cfg, mesh, chunk_rows, prefetch
+    accum_step,
+    store,
+    cand_sets,
+    num_items,
+    cfg,
+    mesh,
+    chunk_rows,
+    prefetch,
+    cursor: MiningState | None = None,
+    save_cb: Callable | None = None,
+    save_every: int = 0,
 ):
+    """One level's candidate passes over the store.
+
+    ``cursor`` (a mid-level :class:`MiningState`) resumes an interrupted
+    level: finished passes' counts are restored verbatim, the in-progress
+    pass restarts from its saved accumulator at its saved chunk index, and
+    later passes run normally. ``save_cb(counts, pass_start, acc, done)``
+    is invoked every ``save_every`` chunks with the level's cursor state.
+    """
     k_total = cand_sets.shape[0]
     quantum = ap._candidate_quantum(cfg, mesh)
     counts = np.zeros(k_total, dtype=np.int64)
-    for start in range(0, k_total, cfg.max_candidates_per_pass):
+    start0, resume_chunks, resume_acc = 0, 0, None
+    if cursor is not None:
+        if cursor.counts is None or cursor.counts.shape[0] != k_total:
+            raise CheckpointMismatch(
+                f"mid-level checkpoint carries {None if cursor.counts is None else cursor.counts.shape[0]} "
+                f"candidate counts, but level {cursor.next_k} regenerated {k_total} "
+                "candidates — checkpoint does not match this mine"
+            )
+        counts[:] = cursor.counts
+        start0 = int(cursor.pass_start)
+        resume_chunks = int(cursor.chunks_done)
+        resume_acc = cursor.acc
+    for start in range(start0, k_total, cfg.max_candidates_per_pass):
         chunk_c = cand_sets[start : start + cfg.max_candidates_per_pass]
         kp = ap._pad_bucket(chunk_c.shape[0], quantum)
         c_dev, len_dev = ap._place_candidates(chunk_c, kp, num_items, cfg, mesh)
+        init_acc, start_chunk = None, 0
+        if resume_acc is not None:   # first pass after a mid-level resume only
+            if resume_acc.shape[0] != kp:
+                raise CheckpointMismatch(
+                    f"saved accumulator has {resume_acc.shape[0]} slots, this pass "
+                    f"pads to {kp} — candidate bucketing (candidate_pad / mesh) changed"
+                )
+            init_acc, start_chunk = resume_acc, resume_chunks
+            resume_acc = None
         chunks = (
             chunk
             for chunk, _ in store.iter_chunks(
-                chunk_rows, representation=cfg.representation, pad=True
+                chunk_rows,
+                representation=cfg.representation,
+                pad=True,
+                start_chunk=start_chunk,
             )
         )
+        if save_cb is not None and save_every > 0:
+            def save_fn(acc_np, done, _start=start):
+                save_cb(counts, _start, acc_np, done)
+        else:
+            save_fn = None
         out = _count_pass_chunks(
-            accum_step, chunks, c_dev, len_dev, kp, cfg, mesh, prefetch
+            accum_step, chunks, c_dev, len_dev, kp, cfg, mesh, prefetch,
+            init_acc=init_acc, chunks_done=start_chunk,
+            save_every=save_every, save_fn=save_fn,
         )
         counts[start : start + chunk_c.shape[0]] = out[: chunk_c.shape[0]]
     return counts
+
+
+def _as_manager(checkpoint, store) -> MiningCheckpoint | None:
+    if checkpoint is None or checkpoint is False:
+        return None
+    if isinstance(checkpoint, MiningCheckpoint):
+        return checkpoint
+    if checkpoint is True:
+        return MiningCheckpoint(store.checkpoint_path)
+    return MiningCheckpoint(str(checkpoint))
 
 
 def mine_streamed(
@@ -143,6 +251,9 @@ def mine_streamed(
     prefetch: int = 2,
     checkpoint_cb: Callable | None = None,
     resume_state: dict | None = None,
+    checkpoint: "MiningCheckpoint | str | bool | None" = None,
+    checkpoint_every_chunks: int = 0,
+    resume: bool = False,
 ) -> ap.AprioriResult:
     """Level-wise Apriori over an on-disk store, dict-equal to ``mine``.
 
@@ -152,17 +263,93 @@ def mine_streamed(
     ``store.num_transactions``; the DB is re-streamed from disk once per
     candidate pass (sequential mmap reads — the per-pass I/O the paper's
     per-level Hadoop jobs pay too).
+
+    Fault tolerance: pass ``checkpoint=True`` (next to the store manifest,
+    ``store.checkpoint_path``), a path, or a :class:`MiningCheckpoint` to
+    persist driver state at every level boundary — plus, when
+    ``checkpoint_every_chunks > 0``, mid-level at that chunk cadence.
+    ``resume=True`` restores the newest committed snapshot (validated
+    against the store and config fingerprints) and continues; the result is
+    dict-identical to an uninterrupted mine. ``checkpoint_cb`` /
+    ``resume_state`` remain the raw level-boundary hooks (in-memory
+    restarts, tests) and compose with the manager.
     """
     n, num_items = store.num_transactions, store.num_items
     chunk_rows = _effective_chunk_rows(chunk_rows, cfg, mesh)
+    if checkpoint_every_chunks < 0:
+        raise ValueError("checkpoint_every_chunks must be >= 0")
     accum_step = make_accum_count_step(mesh, cfg)
+    mgr = _as_manager(checkpoint, store)
 
-    def count_fn(cand_sets):
+    if mgr is None:
+        if resume:
+            raise ValueError("resume=True requires checkpoint=")
+
+        def count_fn(cand_sets, level_k):
+            return _count_level_streamed(
+                accum_step, store, cand_sets, num_items, cfg, mesh, chunk_rows, prefetch
+            )
+
+        return ap.run_level_loop(count_fn, n, num_items, cfg, checkpoint_cb, resume_state)
+
+    store_fp = store_fingerprint(store)
+    mine_fp = mining_fingerprint(cfg, chunk_rows)
+
+    cursor: MiningState | None = None
+    if resume:
+        loaded = mgr.load_latest()
+        if loaded is not None:
+            state, manifest = loaded
+            mgr.validate(manifest, store_fp, mine_fp)
+            resume_state = {"levels": dict(state.levels), "next_k": state.next_k}
+            if state.mid_level:
+                cursor = state
+    else:
+        mgr.clear()   # don't mix snapshots of distinct mines under one seq line
+
+    # completed levels as of NOW — what a mid-level snapshot must carry
+    done_levels = {"levels": dict(resume_state["levels"]) if resume_state else {}}
+
+    def level_cb(k, levels):
+        done_levels["levels"] = dict(levels)
+        mgr.save(MiningState(levels=dict(levels), next_k=k + 1), store_fp, mine_fp)
+        if checkpoint_cb:
+            checkpoint_cb(k, levels)
+
+    def count_fn(cand_sets, level_k):
+        nonlocal cursor
+        cur, cursor = cursor, None   # the cursor resumes exactly one level
+        if cur is not None and cur.next_k != level_k:
+            raise CheckpointMismatch(
+                f"mid-level checkpoint is for level {cur.next_k}, "
+                f"but the loop resumed at level {level_k}"
+            )
+
+        def save_cb(counts, pass_start, acc_np, done):
+            mgr.save(
+                MiningState(
+                    levels=done_levels["levels"],
+                    next_k=level_k,
+                    mid_level=True,
+                    pass_start=pass_start,
+                    chunks_done=done,
+                    counts=counts,
+                    acc=acc_np,
+                ),
+                store_fp,
+                mine_fp,
+            )
+
         return _count_level_streamed(
-            accum_step, store, cand_sets, num_items, cfg, mesh, chunk_rows, prefetch
+            accum_step, store, cand_sets, num_items, cfg, mesh, chunk_rows, prefetch,
+            cursor=cur,
+            save_cb=save_cb if checkpoint_every_chunks > 0 else None,
+            save_every=checkpoint_every_chunks,
         )
 
-    return ap.run_level_loop(count_fn, n, num_items, cfg, checkpoint_cb, resume_state)
+    result = ap.run_level_loop(count_fn, n, num_items, cfg, level_cb, resume_state)
+    mgr.wait()   # the last boundary snapshot is committed before we return
+    return result
 
 
 def mine_son_streamed(
@@ -171,24 +358,43 @@ def mine_son_streamed(
     mesh=None,
     chunk_rows: int = 8192,
     prefetch: int = 2,
+    fault: FaultConfig | None = None,
 ) -> ap.AprioriResult:
     """SON two-phase mining over an on-disk store, dict-equal to
     ``mine_son`` (and to ``mine`` — SON is exact for any partitioning).
 
     Phase 1 maps over the store's *on-disk shards* as the SON partitions:
     each shard is unpacked and mined locally to completion at the
-    shard-scaled threshold, one shard in RAM at a time. Phase 2 is ONE
-    streamed exact count of the union — two distributed rounds total, never
-    the whole DB in memory.
+    shard-scaled threshold. With ``fault=FaultConfig(...)`` the shard
+    mappers run through the retrying work queue
+    (:func:`distributed.fault_tolerance.run_partitions`): a failed shard
+    read or mapper is re-executed with backoff — shards are re-loadable by
+    index, the HDFS-split property — stragglers are speculatively
+    re-issued, and the executor's :class:`FaultReport` lands on
+    ``result.fault_report``. In ``on_exhausted="skip"`` mode a dropped
+    partition is an EXPLICITLY reported completeness gap (SON's no-miss
+    guarantee needs every partition).
+
+    Phase 2 is ONE streamed exact count of the union — two distributed
+    rounds total, never the whole DB in memory.
     """
     n, num_items = store.num_transactions, store.num_items
     min_count = max(1, math.ceil(cfg.min_support * n))
     chunk_rows = _effective_chunk_rows(chunk_rows, cfg, mesh)
 
     # ---- phase 1: local mining per on-disk shard, union of local winners --
-    union = son_mod.union_local_winners(
-        (store.partition_dense(p) for p in range(store.num_partitions)), cfg
-    )
+    report = None
+    if fault is None:
+        union = son_mod.union_local_winners(
+            (store.partition_dense(p) for p in range(store.num_partitions)), cfg
+        )
+    else:
+        def map_shard(p: int) -> dict:
+            # re-reads shard p from disk on every (re-)execution — idempotent
+            return son_mod.local_winners(store.partition_dense(p), cfg)
+
+        winners, report = run_partitions(map_shard, store.num_partitions, fault)
+        union = son_mod.merge_winners(w for w in winners if w is not None)
 
     # ---- phase 2: ONE streamed exact count of the whole union ----
     # All levels' candidate passes are device-placed up front (the union is
@@ -230,4 +436,6 @@ def mine_son_streamed(
         keep = sup >= min_count
         if keep.any():
             levels[k] = (cands[keep], sup[keep])
-    return ap.AprioriResult(levels=levels, num_transactions=n, min_count=min_count)
+    return ap.AprioriResult(
+        levels=levels, num_transactions=n, min_count=min_count, fault_report=report
+    )

@@ -1,6 +1,6 @@
 from repro.data.synthetic import gen_transactions, gen_transactions_chunked, QuestConfig
 from repro.data.corpus import transactions_from_tokens
-from repro.data.pipeline import ShardedBatchIterator, synthetic_token_batches
+from repro.data.pipeline import ShardedBatchIterator
 from repro.data.store import (
     TransactionStore,
     StoreWriter,

@@ -2,8 +2,8 @@
 
 Deterministic epoch shuffling (seed fold-in), global-batch sharding over the
 mesh data axes, and a one-step prefetch thread (double buffering) so host
-batch assembly overlaps device compute — the data-pipeline substrate for both
-the miner and the LM trainer.
+batch assembly overlaps device compute — the data-pipeline substrate for the
+streaming miner (DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -16,16 +16,6 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
-
-
-def synthetic_token_batches(vocab_size: int, batch: int, seq_len: int, seed: int = 0):
-    """Infinite deterministic stream of {tokens, labels} int32 batches."""
-    step = 0
-    while True:
-        rng = np.random.default_rng((seed, step))
-        toks = rng.integers(0, vocab_size, size=(batch, seq_len + 1), dtype=np.int32)
-        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
-        step += 1
 
 
 class ShardedBatchIterator:

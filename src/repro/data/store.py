@@ -42,9 +42,18 @@ LAYOUT_NAME = "packed-u32-le"   # uint32 words, little-endian bit order (§4)
 MANIFEST_NAME = "manifest.json"
 
 
+DEFAULT_CHECKPOINT_DIR = "_checkpoints"
+
+
 @dataclasses.dataclass(frozen=True)
 class StoreManifest:
-    """The namenode metadata: logical shape + physical shard layout."""
+    """The namenode metadata: logical shape + physical shard layout.
+
+    ``checkpoint_dir`` points (relative to the store directory) at where
+    mining checkpoints for this store live — resume tooling finds the
+    snapshots next to the data they were taken over (DESIGN.md §11).
+    Manifests written before the field existed read back with the default.
+    """
 
     version: int
     layout: str
@@ -52,6 +61,7 @@ class StoreManifest:
     num_items: int
     words: int                  # packed words per row == packed_words(num_items)
     shard_rows: tuple           # rows per shard, in order
+    checkpoint_dir: str = DEFAULT_CHECKPOINT_DIR
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -67,6 +77,7 @@ class StoreManifest:
             num_items=int(d["num_items"]),
             words=int(d["words"]),
             shard_rows=tuple(int(r) for r in d["shard_rows"]),
+            checkpoint_dir=str(d.get("checkpoint_dir", DEFAULT_CHECKPOINT_DIR)),
         )
 
 
@@ -97,6 +108,11 @@ class TransactionStore:
     def shard_path(self, index: int) -> str:
         return os.path.join(self.path, shard_filename(index))
 
+    @property
+    def checkpoint_path(self) -> str:
+        """Where this store's mining checkpoints live (manifest pointer)."""
+        return os.path.join(self.path, self.manifest.checkpoint_dir)
+
     # ---------------------------------------------------------- partitions --
     def partition_packed(self, index: int) -> np.ndarray:
         """One shard as a read-only memory-mapped (rows, words) uint32 array."""
@@ -114,7 +130,13 @@ class TransactionStore:
         return enc.unpack_bits(np.asarray(self.partition_packed(index)), self.num_items)
 
     # -------------------------------------------------------------- chunks --
-    def iter_chunks(self, chunk_rows: int, representation: str = "packed", pad: bool = False):
+    def iter_chunks(
+        self,
+        chunk_rows: int,
+        representation: str = "packed",
+        pad: bool = False,
+        start_chunk: int = 0,
+    ):
         """Yield ``(chunk, valid_rows)`` covering all n rows in order.
 
         chunk: (chunk_rows or fewer, words) uint32 when ``representation ==
@@ -122,16 +144,31 @@ class TransactionStore:
         assembled across shard boundaries, copying only the sliced rows out
         of the mmap. With ``pad=True`` every chunk has exactly
         ``chunk_rows`` rows, the tail zero-filled (inert, DESIGN.md §3).
+
+        ``start_chunk`` seeks: the first ``start_chunk`` chunks are skipped
+        WITHOUT copying their rows (whole shards before the cursor are never
+        even opened), and the yielded sequence is identical to dropping that
+        prefix of a full iteration — the resume cursor of DESIGN.md §11.
+        Chunk indices are deterministic for a fixed ``chunk_rows``: chunk i
+        is always rows ``[i*chunk_rows, (i+1)*chunk_rows)``.
         """
         if chunk_rows < 1:
             raise ValueError("chunk_rows must be >= 1")
+        if start_chunk < 0:
+            raise ValueError("start_chunk must be >= 0")
         if representation not in ("packed", "dense"):
             raise ValueError(f"representation must be packed|dense, got {representation!r}")
+        skip = start_chunk * chunk_rows
+        if skip >= self.manifest.n:
+            return
         parts: list[np.ndarray] = []
         have = 0
         for s in range(self.num_partitions):
+            if skip >= self.manifest.shard_rows[s]:
+                skip -= self.manifest.shard_rows[s]
+                continue
             shard = self.partition_packed(s)
-            pos = 0
+            pos, skip = skip, 0
             while pos < shard.shape[0]:
                 take = min(chunk_rows - have, shard.shape[0] - pos)
                 parts.append(np.asarray(shard[pos : pos + take]))

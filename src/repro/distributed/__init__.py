@@ -1,15 +1,32 @@
-from repro.distributed.sharding import (
-    ShardingRules,
-    param_pspecs,
-    batch_pspec,
-    cache_pspecs,
-    state_pspecs,
+"""Fault tolerance for the mining/serving stack (DESIGN.md §11).
+
+Three layers, mirroring the paper's Hadoop reliance on task re-execution:
+
+  * :mod:`repro.distributed.checkpoint` — resumable streamed mining:
+    ``MiningCheckpoint`` persists the level loop's complete state (levels,
+    pass cursor, count accumulator, chunk cursor) next to the store
+    manifest; ``mine_streamed(resume=True)`` is dict-identical to an
+    uninterrupted mine.
+  * :mod:`repro.distributed.fault_tolerance` — retryable SON partitions:
+    ``run_partitions`` executes phase-1 mappers through a bounded-retry,
+    speculatively re-issuing work queue with explicit failure reporting.
+  * :mod:`repro.distributed.supervisor` — supervised serving:
+    ``WorkerSupervisor`` restarts a dead gateway dispatch worker, failing
+    only the in-flight batch's futures.
+"""
+
+from repro.distributed.checkpoint import (
+    CheckpointMismatch,
+    MiningCheckpoint,
+    MiningState,
+    mining_fingerprint,
+    store_fingerprint,
 )
-from repro.distributed.compression import compressed_psum, int8_ef_state
-from repro.distributed.checkpoint import save_checkpoint, load_checkpoint, CheckpointManager
 from repro.distributed.fault_tolerance import (
-    Supervisor,
-    SimulatedFailure,
-    WorkQueue,
-    run_with_backup_tasks,
+    FaultConfig,
+    FaultReport,
+    InjectedFailure,
+    PartitionFailure,
+    run_partitions,
 )
+from repro.distributed.supervisor import WorkerSupervisor

@@ -1,163 +1,257 @@
-"""Sharded checkpointing with manifest + elastic restore.
+"""Mining checkpoints: resumable streamed mining as manifest + npz snapshots.
 
-Layout: <dir>/step_<N>/{manifest.json, arrays.npz}. The manifest records each
-leaf's path, shape, dtype and PartitionSpec; restore re-shards onto ANY mesh
-whose axis sizes divide the shapes (elastic node counts — the paper's cluster
-grows/shrinks without invalidating checkpoints). On a multi-host deployment
-each host would write its addressable shards (same manifest format, one npz
-per host); this single-controller build holds all shards locally so one npz
-suffices — the restore path is identical.
+The paper's fault-tolerance story is Hadoop's: a map task that dies is
+re-executed from its replicated input split, so a long mine over voluminous
+data survives node loss without starting over. This module is that story for
+the single-host streaming driver (DESIGN.md §11): ``mine_streamed``
+periodically persists its COMPLETE driver state —
 
-An async writer thread overlaps serialization with training (double-buffered;
-`wait()` joins before the next save or at exit).
+  * the frozen frequent-itemset dict (every completed level),
+  * the level currently being counted and the candidate-pass cursor,
+  * the device count accumulator of the in-progress pass (host snapshot),
+  * the chunk cursor into the on-disk store,
+
+— and a resumed mine is dict-identical to an uninterrupted one, because the
+store's step-indexed chunk iteration is deterministic and support counting is
+integer arithmetic (folding the remaining chunks into the saved accumulator
+equals folding all chunks into zeros, bit for bit).
+
+Layout (next to the store manifest by default, see
+``TransactionStore.checkpoint_path``)::
+
+    <dir>/ckpt_<SEQ>/{manifest.json, arrays.npz, COMMITTED}
+
+The ``COMMITTED`` marker is written last, so a crash mid-write (including
+``kill -9``) leaves an uncommitted directory that :meth:`load_latest`
+ignores — restore is crash-consistent. Writes are double-buffered onto a
+background thread (:meth:`save` snapshots host arrays synchronously, then
+serializes off the driver's critical path); retention keeps the newest
+``keep`` committed snapshots.
+
+The manifest additionally records a **store fingerprint** (n, num_items,
+shard layout) and the **mining fingerprint** (the result-affecting config
+fields plus ``chunk_rows``): resuming against a different store, config or
+chunking is an explicit :class:`CheckpointMismatch`, never a silent wrong
+answer.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
+import shutil
 import threading
 
-import jax
 import numpy as np
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
+
+CKPT_VERSION = 1
+CKPT_PREFIX = "ckpt_"
+COMMITTED = "COMMITTED"
+
+#: AprioriConfig fields that change the mined RESULT or the meaning of the
+#: saved cursor state — these must match between the checkpointing mine and
+#: the resuming mine. ``max_candidates_per_pass`` and ``candidate_pad`` are
+#: cursor-affecting (pass boundaries / accumulator padding), not
+#: result-affecting; representation/count_impl are deliberately absent:
+#: counting is exact in both representations (DESIGN.md §3/§4).
+_CONFIG_FIELDS = (
+    "min_support",
+    "max_k",
+    "use_naive_paper_map",
+    "max_candidates_per_pass",
+    "candidate_pad",
+)
 
 
-def _flatten(tree):
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    return {"/".join(_key(k) for k in path): leaf for path, leaf in flat}, treedef
+class CheckpointMismatch(ValueError):
+    """A checkpoint was written by a different (store, config, chunking)
+    than the one trying to resume from it."""
 
 
-def _key(k):
-    if hasattr(k, "key"):
-        return str(k.key)
-    if hasattr(k, "idx"):
-        return str(k.idx)
-    return str(k)
+@dataclasses.dataclass
+class MiningState:
+    """One resumable snapshot of the streamed level loop.
+
+    ``levels`` holds every COMPLETED level (k -> (itemsets, supports)).
+    ``next_k`` is the level being (or about to be) counted. A mid-level
+    snapshot additionally carries the candidate-pass cursor: ``counts`` are
+    the finalized supports of the level's already-finished passes,
+    ``pass_start`` the candidate index of the in-progress pass, ``acc`` that
+    pass's count accumulator, and ``chunks_done`` how many store chunks have
+    been folded into it. ``mid_level`` is False at a clean level boundary
+    (the cursor fields are then ignored).
+    """
+
+    levels: dict
+    next_k: int
+    mid_level: bool = False
+    pass_start: int = 0
+    chunks_done: int = 0
+    counts: np.ndarray | None = None    # (k_total,) int64, finished passes
+    acc: np.ndarray | None = None       # (kp,) int32, in-progress pass
 
 
-def _spec_to_json(spec):
-    if spec is None:
-        return None
-
-    def enc(e):
-        if e is None:
-            return None
-        if isinstance(e, (tuple, list)):
-            return list(e)
-        return e
-
-    return [enc(e) for e in spec]
+def store_fingerprint(store) -> dict:
+    """Identity of the data a checkpoint is valid for."""
+    m = store.manifest
+    return {"n": m.n, "num_items": m.num_items, "words": m.words,
+            "shard_rows": list(m.shard_rows)}
 
 
-def _spec_from_json(js):
-    if js is None:
-        return P()
-    return P(*[tuple(e) if isinstance(e, list) else e for e in js])
+def mining_fingerprint(cfg, chunk_rows: int) -> dict:
+    """Identity of the mine a checkpoint's cursor state is valid for.
+    ``chunk_rows`` is part of it: the chunk cursor counts chunks of exactly
+    this size, so a different chunking would misplace the resume point."""
+    out = {f: getattr(cfg, f) for f in _CONFIG_FIELDS}
+    out["chunk_rows"] = int(chunk_rows)
+    return out
 
 
-def save_checkpoint(path: str, tree, step: int, specs=None, extra: dict | None = None):
-    """Synchronous save. `specs`: optional PartitionSpec pytree (recorded for
-    restore-time sharding; restore can also override)."""
-    out_dir = os.path.join(path, f"step_{step:08d}")
-    os.makedirs(out_dir, exist_ok=True)
-    leaves, _ = _flatten(tree)
-    spec_leaves = _flatten(specs)[0] if specs is not None else {}
-    manifest = {
-        "step": step,
-        "extra": extra or {},
-        "leaves": {
-            k: {
-                "shape": list(np.shape(v)),
-                "dtype": str(np.asarray(jax.device_get(v)).dtype),
-                "spec": _spec_to_json(spec_leaves.get(k)),
-            }
-            for k, v in leaves.items()
-        },
-    }
-    arrays = {k: np.asarray(jax.device_get(v)) for k, v in leaves.items()}
-    np.savez(os.path.join(out_dir, "arrays.npz"), **arrays)
-    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    # atomic-ish completion marker (crash-consistent restore)
-    with open(os.path.join(out_dir, "COMMITTED"), "w") as f:
-        f.write("ok")
-    return out_dir
+class MiningCheckpoint:
+    """Manifest+npz checkpoint writer/reader for the streamed mining driver."""
 
-
-def latest_step(path: str):
-    if not os.path.isdir(path):
-        return None
-    steps = []
-    for d in os.listdir(path):
-        if d.startswith("step_") and os.path.exists(os.path.join(path, d, "COMMITTED")):
-            steps.append(int(d.split("_")[1]))
-    return max(steps) if steps else None
-
-
-def load_checkpoint(path: str, template, step: int | None = None, mesh=None, specs=None):
-    """Restore into `template`'s structure. If mesh given, device_put each leaf
-    with its (manifest or override) spec — elastic resharding is just this."""
-    step = latest_step(path) if step is None else step
-    if step is None:
-        raise FileNotFoundError(f"no committed checkpoint under {path}")
-    in_dir = os.path.join(path, f"step_{step:08d}")
-    with open(os.path.join(in_dir, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(in_dir, "arrays.npz"))
-
-    leaves, _ = _flatten(template)
-    spec_leaves = _flatten(specs)[0] if specs is not None else {}
-    out = {}
-    for k, tmpl in leaves.items():
-        arr = data[k]
-        want_dtype = np.asarray(tmpl).dtype if not hasattr(tmpl, "dtype") else tmpl.dtype
-        arr = arr.astype(want_dtype)
-        if mesh is not None:
-            spec = spec_leaves.get(k)
-            if spec is None:
-                spec = _spec_from_json(manifest["leaves"][k]["spec"])
-            out[k] = jax.device_put(arr, NamedSharding(mesh, spec))
-        else:
-            out[k] = jax.numpy.asarray(arr)
-    # rebuild tree
-    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-    ordered = ["/".join(_key(kk) for kk in path) for path, _ in flat]
-    return jax.tree_util.tree_unflatten(treedef, [out[k] for k in ordered]), manifest
-
-
-class CheckpointManager:
-    """Async double-buffered writer + retention policy."""
-
-    def __init__(self, path: str, keep: int = 3):
+    def __init__(self, path: str, keep: int = 2):
+        if keep < 1:
+            raise ValueError("keep must be >= 1")
         self.path = path
         self.keep = keep
         self._thread: threading.Thread | None = None
+        self._seq = self._max_seq(committed_only=False)
 
-    def save_async(self, tree, step: int, specs=None, extra=None):
+    # -------------------------------------------------------------- write --
+    def save(self, state: MiningState, store_fp: dict, mine_fp: dict) -> int:
+        """Queue one snapshot for writing; returns its sequence number.
+
+        Host-side array snapshots are taken synchronously (the caller may
+        mutate its buffers right after); serialization + fsync-order commit
+        happen on a background thread, double-buffered — at most one write
+        in flight, :meth:`save` joins the previous one first.
+        """
         self.wait()
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._seq += 1
+        seq = self._seq
+        arrays = {}
+        for k, (sets, sup) in state.levels.items():
+            arrays[f"sets_{k}"] = np.array(sets, dtype=np.int32, copy=True)
+            arrays[f"sup_{k}"] = np.array(sup, dtype=np.int64, copy=True)
+        if state.mid_level:
+            arrays["counts"] = np.array(state.counts, dtype=np.int64, copy=True)
+            arrays["acc"] = np.array(state.acc, dtype=np.int32, copy=True)
+        manifest = {
+            "version": CKPT_VERSION,
+            "seq": seq,
+            "next_k": int(state.next_k),
+            "mid_level": bool(state.mid_level),
+            "pass_start": int(state.pass_start),
+            "chunks_done": int(state.chunks_done),
+            "levels": sorted(int(k) for k in state.levels),
+            "store": store_fp,
+            "mining": mine_fp,
+        }
 
         def work():
-            save_checkpoint(self.path, host_tree, step, specs=specs, extra=extra)
+            self._write(seq, arrays, manifest)
             self._gc()
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
+        return seq
 
-    def wait(self):
+    def wait(self) -> None:
+        """Join the in-flight background write, if any."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
 
-    def _gc(self):
-        steps = sorted(
-            int(d.split("_")[1])
-            for d in os.listdir(self.path)
-            if d.startswith("step_") and os.path.exists(os.path.join(self.path, d, "COMMITTED"))
-        )
-        for s in steps[: -self.keep]:
-            import shutil
+    def _write(self, seq: int, arrays: dict, manifest: dict) -> None:
+        out_dir = os.path.join(self.path, f"{CKPT_PREFIX}{seq:08d}")
+        os.makedirs(out_dir, exist_ok=True)
+        np.savez(os.path.join(out_dir, "arrays.npz"), **arrays)
+        with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        # the commit point: everything above is invisible until this exists
+        with open(os.path.join(out_dir, COMMITTED), "w") as f:
+            f.write("ok")
 
-            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"), ignore_errors=True)
+    def _gc(self) -> None:
+        seqs = sorted(self._committed_seqs())
+        for s in seqs[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.path, f"{CKPT_PREFIX}{s:08d}"), ignore_errors=True
+            )
+
+    # --------------------------------------------------------------- read --
+    def _committed_seqs(self):
+        if not os.path.isdir(self.path):
+            return []
+        out = []
+        for d in os.listdir(self.path):
+            if d.startswith(CKPT_PREFIX) and os.path.exists(
+                os.path.join(self.path, d, COMMITTED)
+            ):
+                out.append(int(d[len(CKPT_PREFIX):]))
+        return out
+
+    def _max_seq(self, committed_only: bool = True) -> int:
+        if not os.path.isdir(self.path):
+            return 0
+        seqs = [
+            int(d[len(CKPT_PREFIX):])
+            for d in os.listdir(self.path)
+            if d.startswith(CKPT_PREFIX)
+            and (not committed_only or os.path.exists(os.path.join(self.path, d, COMMITTED)))
+        ]
+        return max(seqs) if seqs else 0
+
+    def latest_seq(self) -> int | None:
+        seqs = self._committed_seqs()
+        return max(seqs) if seqs else None
+
+    def load_latest(self) -> tuple[MiningState, dict] | None:
+        """Newest COMMITTED snapshot as ``(state, manifest)``, or None."""
+        seq = self.latest_seq()
+        if seq is None:
+            return None
+        in_dir = os.path.join(self.path, f"{CKPT_PREFIX}{seq:08d}")
+        with open(os.path.join(in_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        if manifest["version"] != CKPT_VERSION:
+            raise CheckpointMismatch(
+                f"checkpoint version {manifest['version']} != supported {CKPT_VERSION}"
+            )
+        data = np.load(os.path.join(in_dir, "arrays.npz"))
+        levels = {
+            int(k): (data[f"sets_{k}"], data[f"sup_{k}"]) for k in manifest["levels"]
+        }
+        state = MiningState(
+            levels=levels,
+            next_k=int(manifest["next_k"]),
+            mid_level=bool(manifest["mid_level"]),
+            pass_start=int(manifest["pass_start"]),
+            chunks_done=int(manifest["chunks_done"]),
+            counts=data["counts"] if manifest["mid_level"] else None,
+            acc=data["acc"] if manifest["mid_level"] else None,
+        )
+        return state, manifest
+
+    def validate(self, manifest: dict, store_fp: dict, mine_fp: dict) -> None:
+        """Refuse to resume across a store/config/chunking change."""
+        if manifest["store"] != store_fp:
+            raise CheckpointMismatch(
+                f"checkpoint was written for store {manifest['store']}, "
+                f"resuming against {store_fp}"
+            )
+        if manifest["mining"] != mine_fp:
+            raise CheckpointMismatch(
+                f"checkpoint was written with mining fingerprint "
+                f"{manifest['mining']}, resuming with {mine_fp}"
+            )
+
+    def clear(self) -> None:
+        """Drop every snapshot (a completed mine has no use for them)."""
+        self.wait()
+        if os.path.isdir(self.path):
+            for d in os.listdir(self.path):
+                if d.startswith(CKPT_PREFIX):
+                    shutil.rmtree(os.path.join(self.path, d), ignore_errors=True)

@@ -1,152 +1,235 @@
-"""Fault tolerance: supervisor (checkpoint/restart + elastic re-mesh) and
-straggler mitigation (over-partitioned work queue + speculative backups).
+"""Retryable partition execution — Hadoop task re-execution for SON phase 1.
 
-The paper's Fig-4 finding — heterogeneous clusters pay the slowest node's
-price — is exactly the straggler problem; Hadoop answers with speculative
-execution, and `run_with_backup_tasks` is the TPU-side equivalent: work is
-over-partitioned `factor`x beyond the device count and unfinished shards are
-re-issued to idle devices, bounding makespan by ~max(shard) instead of
-~max(node) * load.
+The paper's whole case for Map/Reduce is that a map task which dies is simply
+re-executed from its replicated split; "Observations on Factors Affecting
+Performance of MapReduce based Apriori" (1701.05982) adds that stragglers on
+heterogeneous nodes dominate wall-clock, which Hadoop answers with
+speculative execution. This module is both mechanisms for the mining stack's
+real phase-1 executor (DESIGN.md §11): SON partitions (= the store's on-disk
+shards) are dispatched through a bounded-retry work queue over a thread
+pool —
+
+  * a failed partition (shard read error, injected fault, worker exception)
+    is retried with exponential backoff, up to ``max_retries`` re-executions;
+  * a straggling partition is speculatively re-issued to an idle worker once
+    it has run ``speculative_factor``× the median completed-task time
+    (first completion wins; duplicates are discarded);
+  * a partition that exhausts its retries either raises
+    :class:`PartitionFailure` naming the partition (default) or — in
+    ``on_exhausted="skip"`` mode — is recorded in the :class:`FaultReport`
+    and the mine continues with an EXPLICITLY reported gap.
+
+Partitions must be *re-loadable by index* (the worker takes the partition
+number, not the data) — exactly the property the on-disk store's shards
+have, and the analogue of HDFS split replication.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Callable, Sequence
+from typing import Callable
 
-import jax
-import numpy as np
-
-from repro.distributed.checkpoint import CheckpointManager, latest_step, load_checkpoint
+_UNSET = object()
 
 
-class SimulatedFailure(Exception):
-    """Raised by a failure injector to emulate a node loss."""
+class PartitionFailure(RuntimeError):
+    """A partition exhausted its retries. Names the partition and keeps the
+    last underlying exception as ``__cause__``/``cause``."""
 
-    def __init__(self, lost_nodes: int = 1):
-        super().__init__(f"lost {lost_nodes} node(s)")
-        self.lost_nodes = lost_nodes
-
-
-@dataclasses.dataclass
-class Supervisor:
-    """Train-loop wrapper: periodic async checkpoints, restart-on-failure,
-    elastic re-mesh through the checkpoint's elastic restore path.
-
-    make_mesh_fn(num_nodes) -> mesh; rebuild_fn(mesh, restored_state) -> the
-    jit'd step closure for that mesh (recompiled on re-mesh — elastic scale).
-    """
-
-    ckpt_dir: str
-    make_mesh_fn: Callable
-    rebuild_fn: Callable
-    checkpoint_every: int = 10
-    keep: int = 3
-
-    def run(
-        self,
-        state,
-        state_specs,
-        batch_fn: Callable,
-        num_steps: int,
-        num_nodes: int,
-        failure_injector: Callable | None = None,
-        max_restarts: int = 3,
-    ):
-        """``batch_fn(step) -> batch`` must be a step-indexed DETERMINISTIC
-        stream (data.pipeline seeds by step): on restore the data order
-        rewinds with the model state, which is what makes restart bit-exact —
-        a stateful iterator cannot be rewound and silently skips batches."""
-        mgr = CheckpointManager(self.ckpt_dir, keep=self.keep)
-        mesh = self.make_mesh_fn(num_nodes)
-        step_fn = self.rebuild_fn(mesh, state)
-        restarts = 0
-        step = int(jax.device_get(state["opt"]["step"])) if "opt" in state else 0
-        history = []
-        while step < num_steps:
-            try:
-                if failure_injector:
-                    failure_injector(step)
-                batch = batch_fn(step)
-                state, metrics = step_fn(state, batch)
-                step += 1
-                history.append({k: float(jax.device_get(v)) for k, v in metrics.items()})
-                if step % self.checkpoint_every == 0:
-                    mgr.save_async(state, step, specs=state_specs)
-            except SimulatedFailure as fail:
-                restarts += 1
-                if restarts > max_restarts:
-                    raise
-                mgr.wait()
-                num_nodes = max(1, num_nodes - fail.lost_nodes)  # elastic shrink
-                mesh = self.make_mesh_fn(num_nodes)
-                last = latest_step(self.ckpt_dir)
-                if last is not None:
-                    state, _ = load_checkpoint(
-                        self.ckpt_dir, state, step=last, mesh=mesh, specs=state_specs
-                    )
-                    step = last
-                step_fn = self.rebuild_fn(mesh, state)  # recompile for new mesh
-        mgr.wait()
-        return state, history, {"restarts": restarts, "final_nodes": num_nodes}
+    def __init__(self, partition: int, attempts: int, cause: BaseException):
+        super().__init__(
+            f"partition {partition} failed after {attempts} attempt(s): {cause!r}"
+        )
+        self.partition = partition
+        self.attempts = attempts
+        self.cause = cause
 
 
-# ------------------------------------------------------- straggler layer ----
-@dataclasses.dataclass
-class WorkQueue:
-    """Over-partitioned shard queue with speculative re-issue."""
+class InjectedFailure(RuntimeError):
+    """Raised by failure injectors to emulate a lost map task."""
 
-    shards: Sequence
-    factor: int = 4
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Policy knobs of the retrying partition executor."""
+
+    max_retries: int = 2              # re-executions after the first attempt
+    backoff_s: float = 0.02           # sleep before retry #1
+    backoff_multiplier: float = 2.0   # backoff_s * mult**(attempt-1)
+    max_workers: int = 2              # thread-pool width (peak RAM ~ workers * shard)
+    speculative: bool = True          # re-issue stragglers to idle workers
+    speculative_factor: float = 4.0   # straggler = runtime > factor * median done
+    on_exhausted: str = "raise"       # "raise" | "skip" (explicit-report gap)
+    failure_injector: Callable | None = None   # (partition, attempt) -> may raise
 
     def __post_init__(self):
-        self.pending = list(range(len(self.shards)))
-        self.done: dict = {}
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.max_workers < 1:
+            raise ValueError("max_workers must be >= 1")
+        if self.on_exhausted not in ("raise", "skip"):
+            raise ValueError(f"on_exhausted must be raise|skip, got {self.on_exhausted!r}")
 
 
-def run_with_backup_tasks(
-    shards,
-    worker_fn: Callable,
-    node_speeds: Sequence[float],
-    backup: bool = True,
-):
-    """Simulate the paper's FHDSC (heterogeneous) cluster executing a map
-    phase. Shards are assigned round-robin (Hadoop block placement is
-    speed-OBLIVIOUS — that is exactly why Fig 4's heterogeneous cluster
-    lags). Each shard costs `size(shard)/speed` on its node.
+@dataclasses.dataclass
+class FaultReport:
+    """What the executor actually did — published, never silent."""
 
-    backup=True enables speculative re-execution: a node that drains its own
-    queue steals the largest unstarted shard from the most-backlogged node
-    (Hadoop's speculative task, TPU work-queue form — DESIGN.md §5).
+    attempts: dict = dataclasses.field(default_factory=dict)  # partition -> executions
+    retries: int = 0                 # failure-triggered re-executions
+    speculative_issued: int = 0      # straggler backup copies launched
+    skipped: tuple = ()              # partitions dropped in "skip" mode
+    completed: int = 0
 
-    Returns (results, makespan_seconds_simulated).
+    @property
+    def total_failures(self) -> int:
+        return self.retries + len(self.skipped)
+
+    def to_json(self) -> dict:
+        return {
+            "attempts": {int(k): int(v) for k, v in self.attempts.items()},
+            "retries": self.retries,
+            "speculative_issued": self.speculative_issued,
+            "skipped": [int(p) for p in self.skipped],
+            "completed": self.completed,
+        }
+
+
+class _Task:
+    __slots__ = ("idx", "attempt", "speculative")
+
+    def __init__(self, idx: int, attempt: int, speculative: bool = False):
+        self.idx = idx
+        self.attempt = attempt
+        self.speculative = speculative
+
+
+def run_partitions(
+    worker_fn: Callable[[int], object],
+    num_partitions: int,
+    fault: FaultConfig = FaultConfig(),
+) -> tuple[list, FaultReport]:
+    """Execute ``worker_fn(p)`` for every partition through the retrying,
+    speculating work queue; returns ``(results, report)`` with ``results[p]``
+    being the partition's value (or None for a skipped partition).
+
+    ``worker_fn`` must be idempotent and re-invokable (it re-reads its
+    partition — the HDFS-split property); duplicate completions from
+    speculative copies are discarded under a lock, first writer wins.
     """
-    n_nodes = len(node_speeds)
-    costs = [float(np.asarray(s).size) for s in shards]
-    queues = [[] for _ in range(n_nodes)]
-    for i in range(len(shards)):
-        queues[i % n_nodes].append(i)  # speed-oblivious placement
+    if num_partitions == 0:
+        return [], FaultReport()
+    results = [_UNSET] * num_partitions
+    report = FaultReport(attempts={p: 0 for p in range(num_partitions)})
+    lock = threading.Lock()
+    done_evt = threading.Event()
+    pending: list[_Task] = [_Task(p, 0) for p in range(num_partitions)]
+    running: dict[int, float] = {}       # partition -> oldest running start time
+    durations: list[float] = []          # completed-task wall times (for median)
+    remaining = [num_partitions]         # partitions not yet done/skipped
+    error: list = []                     # first PartitionFailure in "raise" mode
 
-    times = [0.0] * n_nodes
-    done = [False] * len(shards)
-    while not all(done):
-        node = min(range(n_nodes), key=lambda n: times[n])
-        if queues[node]:
-            i = queues[node].pop(0)
-        elif backup:
-            donor = max(range(n_nodes), key=lambda n: sum(costs[j] for j in queues[n]))
-            if not queues[donor]:
-                break
-            # steal the donor's largest pending shard
-            i = max(queues[donor], key=lambda j: costs[j])
-            queues[donor].remove(i)
-        else:
-            times[node] = float("inf")  # idles forever; others drain their queues
+    def _finish_one():
+        remaining[0] -= 1
+        if remaining[0] <= 0:
+            done_evt.set()
+
+    def _next_task():
+        with lock:
+            if pending:
+                t = pending.pop(0)
+                running.setdefault(t.idx, time.perf_counter())
+                return t
+        return None
+
+    def _run_task(t: _Task):
+        t0 = time.perf_counter()
+        try:
+            if fault.failure_injector is not None:
+                fault.failure_injector(t.idx, t.attempt)
+            value = worker_fn(t.idx)
+        except BaseException as e:  # noqa: BLE001 — every failure is policy-handled
+            with lock:
+                report.attempts[t.idx] += 1
+                if results[t.idx] is not _UNSET:
+                    return          # a twin already completed it; failure moot
+                if t.attempt < fault.max_retries:
+                    report.retries += 1
+                    running.pop(t.idx, None)   # restart the straggler clock
+                    delay = fault.backoff_s * fault.backoff_multiplier**t.attempt
+                    retry = _Task(t.idx, t.attempt + 1)
+                else:
+                    running.pop(t.idx, None)
+                    if fault.on_exhausted == "skip":
+                        report.skipped = report.skipped + (t.idx,)
+                        results[t.idx] = None
+                    elif not error:
+                        error.append(PartitionFailure(t.idx, t.attempt + 1, e))
+                        done_evt.set()
+                    _finish_one()
+                    return
+            if delay > 0:
+                time.sleep(delay)   # backoff outside the lock
+            with lock:
+                if results[t.idx] is _UNSET:
+                    pending.append(retry)
+            return
+        dt = time.perf_counter() - t0
+        with lock:
+            report.attempts[t.idx] += 1
+            if results[t.idx] is _UNSET:
+                results[t.idx] = value
+                report.completed += 1
+                durations.append(dt)
+                running.pop(t.idx, None)
+                _finish_one()
+
+    def _worker():
+        while not done_evt.is_set():
+            t = _next_task()
+            if t is None:
+                if done_evt.wait(timeout=0.005):
+                    return
+                continue
+            _run_task(t)
+
+    n_workers = min(fault.max_workers, num_partitions)
+    threads = [
+        threading.Thread(target=_worker, name=f"son-partition-{i}", daemon=True)
+        for i in range(n_workers)
+    ]
+    for th in threads:
+        th.start()
+
+    # ---- the driver doubles as the speculation monitor -------------------
+    speculated: set[int] = set()
+    while not done_evt.wait(timeout=0.01):
+        if not fault.speculative:
             continue
-        times[node] += costs[i] / node_speeds[node]
-        done[i] = True
-    makespan = max(t for t in times if t != float("inf"))
+        with lock:
+            if pending or len(durations) < 1:
+                continue            # no idle capacity signal / no baseline yet
+            med = sorted(durations)[len(durations) // 2]
+            now = time.perf_counter()
+            for idx, started in list(running.items()):
+                if (
+                    idx not in speculated
+                    and results[idx] is _UNSET
+                    and now - started > fault.speculative_factor * max(med, 1e-4)
+                ):
+                    pending.append(_Task(idx, 0, speculative=True))
+                    speculated.add(idx)
+                    report.speculative_issued += 1
+    # The job is complete once every partition has a recorded outcome. A
+    # worker may still be parked inside a SUPERSEDED attempt (its twin
+    # already won) — abandon it after a short grace, as Hadoop kills the
+    # slower speculative attempt: the daemon thread's late completion is
+    # discarded under the results lock, so it cannot change the outcome.
+    for th in threads:
+        th.join(timeout=0.05)
 
-    results = [worker_fn(s) for s in shards]  # real compute (correctness path)
-    return results, float(makespan)
+    if error:
+        raise error[0]
+    return [None if r is _UNSET else r for r in results], report

@@ -1,0 +1,63 @@
+"""Serving-side supervision: restart a dead gateway dispatch worker.
+
+The gateway's micro-batcher runs ONE dispatch worker thread; if that thread
+dies (a bug outside the per-group exception fence, an injected fault), every
+queued request would hang forever — the exact failure mode the paper's
+JobTracker answers by re-arming a dead TaskTracker's work. The
+:class:`WorkerSupervisor` polls the worker's liveness and, on death, calls
+``MicroBatcher.restart_worker()``: the futures of the batch that was
+IN FLIGHT inside the dead worker are failed explicitly (with the
+:class:`~repro.serving.batcher.WorkerCrashed` cause — a client sees an
+error, never a hang), the admission queue is left intact and a fresh worker
+thread re-arms it, and the restart lands in
+``serving/metrics.py::worker_restarts``.
+
+Scope: supervision restarts the DISPATCH LOOP, not the device state — the
+rulebook generations are immutable host/device records owned by the gateway,
+so a restarted worker serves the same generation bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import threading
+
+
+class WorkerSupervisor:
+    """Poll a gateway's dispatch worker; restart it when it dies.
+
+    Context-managed::
+
+        with Gateway(rb) as gw, WorkerSupervisor(gw):
+            ...
+
+    ``restarts`` counts successful restarts (also mirrored into the
+    gateway's metrics by ``restart_worker`` itself).
+    """
+
+    def __init__(self, gateway, poll_interval_s: float = 0.02):
+        self._batcher = gateway._batcher
+        self._interval = float(poll_interval_s)
+        self._stop = threading.Event()
+        self.restarts = 0
+        self._thread = threading.Thread(
+            target=self._run, name="gateway-supervisor", daemon=True
+        )
+        self._thread.start()
+
+    def _run(self) -> None:
+        while not self._stop.wait(self._interval):
+            if self._batcher.closed:
+                continue            # shutdown is not a crash
+            if not self._batcher.worker_alive:
+                if self._batcher.restart_worker():
+                    self.restarts += 1
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "WorkerSupervisor":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

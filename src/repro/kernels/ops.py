@@ -234,17 +234,3 @@ def rule_match(
         interpret=(impl == "pallas_interpret"),
     )
     return out[:n, :items]
-
-
-def flash_attention(q, k, v, *, causal: bool = True, impl: str = "auto", block_q: int = 512, block_k: int = 512):
-    """Dispatch for attention: Pallas flash kernel on TPU, chunked jnp otherwise."""
-    impl = resolve_impl(impl)
-    if impl == "jnp":
-        from repro.models.attention import chunked_attention
-
-        return chunked_attention(q, k, v, causal=causal)
-    from repro.kernels.flash_attention import flash_attention_pallas
-
-    return flash_attention_pallas(
-        q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=(impl == "pallas_interpret")
-    )

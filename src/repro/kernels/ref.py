@@ -77,24 +77,3 @@ def rule_match_ref(b_packed, a_packed, lengths, c_packed, scores):
     weights = matched.astype(jnp.float32) * scores.astype(jnp.float32)[None, :]
     cons_dense = unpack_bits_ref(c_packed, 32 * c_packed.shape[1])  # (R, 32·W)
     return weights @ cons_dense
-
-
-def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
-    """Reference attention (fp32 softmax), GQA-aware.
-
-    q: (B, Sq, Hq, D), k/v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
-    """
-    b, sq, hq, d = q.shape
-    _, skv, hkv, _ = k.shape
-    scale = (d ** -0.5) if scale is None else scale
-    group = hq // hkv
-    k = jnp.repeat(k, group, axis=2)
-    v = jnp.repeat(v, group, axis=2)
-    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
-    if causal:
-        # decode offset: queries occupy the last sq positions of the kv axis
-        qpos = jnp.arange(sq) + (skv - sq)
-        mask = qpos[:, None] >= jnp.arange(skv)[None, :]
-        logits = jnp.where(mask[None, None], logits, -jnp.inf)
-    probs = jax.nn.softmax(logits, axis=-1)
-    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)

@@ -11,6 +11,13 @@
   # (host RAM bounded by --stream-chunk-rows, DESIGN.md §9):
   PYTHONPATH=src python -m repro.launch.mine --transactions 2000000 \
       --store /data/quest_2m --ingest --stream-chunk-rows 8192
+  # fault-tolerant: checkpoint every 64 chunks; after a crash, rerun with
+  # --resume for a dict-identical result (DESIGN.md §11):
+  PYTHONPATH=src python -m repro.launch.mine ... --store /data/quest_2m \
+      --checkpoint-every 64 [--resume]
+  # retryable SON phase 1 over the store's shards:
+  PYTHONPATH=src python -m repro.launch.mine ... --store /data/quest_2m \
+      --algo son --max-partition-retries 2
 
 ``--rulebook PATH`` compiles the mined itemsets into the packed-bitset rule
 columns the Pallas rule-match serving engine consumes (DESIGN.md §8) and
@@ -54,7 +61,16 @@ def main():
                     help="rulebook serving score column")
     ap.add_argument("--max-rules", type=int, default=None,
                     help="truncate the rulebook to the top-scoring rules")
-    ap.add_argument("--ckpt", default="", help="mining checkpoint dir (resume per level)")
+    ap.add_argument("--checkpoint-every", type=int, default=0, metavar="CHUNKS",
+                    help="streamed mining: persist a resumable checkpoint next to "
+                         "the store manifest every N chunks (0 = level "
+                         "boundaries only when --resume is possible, i.e. off)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the streamed mine from the newest committed "
+                         "checkpoint in the store's checkpoint dir")
+    ap.add_argument("--max-partition-retries", type=int, default=None, metavar="N",
+                    help="SON streamed phase 1: run shard mappers through the "
+                         "retrying executor with N re-executions per partition")
     ap.add_argument("--store", default="", metavar="DIR",
                     help="on-disk transaction store: mine out-of-core via the "
                          "streaming driver (ingested here if absent)")
@@ -115,48 +131,39 @@ def main():
         use_naive_paper_map=(args.algo == "naive_paper"),
     )
 
-    ckpt_cb = None
-    resume = None
-    if args.ckpt:
-        from repro.distributed.checkpoint import latest_step, load_checkpoint, save_checkpoint
-
-        os.makedirs(args.ckpt, exist_ok=True)
-
-        def ckpt_cb(k, levels):
-            flat = {}
-            for kk, (sets, sup) in levels.items():
-                flat[f"sets_{kk}"] = sets
-                flat[f"sup_{kk}"] = sup
-            save_checkpoint(args.ckpt, flat, step=k)
-
-        last = latest_step(args.ckpt)
-        if last is not None:
-            print(f"[mine] resuming from level {last}")
-            import numpy as _np
-            tmpl, manifest = None, None  # reconstruct levels from npz directly
-            data = _np.load(os.path.join(args.ckpt, f"step_{last:08d}", "arrays.npz"))
-            levels = {}
-            for key in data.files:
-                if key.startswith("sets_"):
-                    kk = int(key.split("_")[1])
-                    levels[kk] = (data[key], data[f"sup_{kk}"])
-            resume = {"levels": levels, "next_k": last + 1}
+    if (args.checkpoint_every or args.resume) and store is None:
+        ap.error("--checkpoint-every/--resume need the streamed driver: add --store DIR")
+    if args.max_partition_retries is not None and (store is None or args.algo != "son"):
+        ap.error("--max-partition-retries needs --store DIR and --algo son")
 
     t0 = time.time()
     if store is not None:
         from repro.core.streaming import mine_son_streamed, mine_streamed
 
         if args.algo == "son":
+            fault = None
+            if args.max_partition_retries is not None:
+                from repro.distributed.fault_tolerance import FaultConfig
+
+                fault = FaultConfig(max_retries=args.max_partition_retries)
             res = mine_son_streamed(store, cfg, mesh=mesh,
-                                    chunk_rows=args.stream_chunk_rows)
+                                    chunk_rows=args.stream_chunk_rows, fault=fault)
+            if res.fault_report is not None:
+                print(f"[mine] SON fault report: {json.dumps(res.fault_report.to_json())}")
         else:
+            use_ckpt = bool(args.checkpoint_every) or args.resume
+            if args.resume:
+                print(f"[mine] resuming from {store.checkpoint_path} (if a committed "
+                      "checkpoint exists)")
             res = mine_streamed(store, cfg, mesh=mesh,
                                 chunk_rows=args.stream_chunk_rows,
-                                checkpoint_cb=ckpt_cb, resume_state=resume)
+                                checkpoint=True if use_ckpt else None,
+                                checkpoint_every_chunks=args.checkpoint_every,
+                                resume=args.resume)
     elif args.algo == "son":
         res = mine_son(db, cfg, mesh=mesh, num_partitions=args.partitions)
     else:
-        res = mine(db, cfg, mesh=mesh, checkpoint_cb=ckpt_cb, resume_state=resume)
+        res = mine(db, cfg, mesh=mesh)
     dt = time.time() - t0
 
     print(f"[mine] {dt:.2f}s; min_count={res.min_count}")

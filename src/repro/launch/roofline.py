@@ -14,9 +14,9 @@ while-trip-count-corrected static walk of the compiled module — the raw
 ``cost_analysis()`` numbers are recorded alongside for reference; they count
 scan bodies once and so underestimate by ~L×, see EXPERIMENTS.md §Dry-run).
 
-MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) tokens-based estimate; the
-ratio MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is 'useful'
-(catches remat recompute and dispatch overhead).
+The miner's useful-FLOPs estimate (2·n·items·K/256 packed word ops) lives in
+``launch.mine_dryrun``; the ratio useful / HLO_FLOPs catches padding and
+dispatch overhead.
 """
 
 from __future__ import annotations
@@ -60,74 +60,3 @@ def roofline_terms(flops_per_dev: float, hbm_bytes_per_dev: float, coll_bytes_pe
         memory_s=hbm_bytes_per_dev / HBM_BW,
         collective_s=coll_bytes_per_dev / ICI_BW,
     )
-
-
-# ------------------------------------------------------------ model flops ----
-def count_params(cfg) -> dict:
-    """Analytic parameter counts (total and active) for MODEL_FLOPS."""
-    d, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
-    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-
-    def attn_params():
-        if cfg.attn_type == "mla":
-            m = cfg.mla
-            qk = m.qk_nope_dim + m.qk_rope_dim
-            return (d * m.q_lora_rank + m.q_lora_rank * h * qk
-                    + d * (m.kv_lora_rank + m.qk_rope_dim)
-                    + m.kv_lora_rank * h * (m.qk_nope_dim + m.v_head_dim)
-                    + h * m.v_head_dim * d)
-        return d * h * dh + 2 * d * kvh * dh + h * dh * d
-
-    def ffn_params(total: bool):
-        if cfg.moe:
-            per = cfg.moe.d_ff_expert * d * (3 if cfg.act == "swiglu" else 2)
-            # stored total includes padded (dead) experts; active = top_k real
-            n_e = cfg.moe.e_padded if total else cfg.moe.top_k
-            return n_e * per + d * cfg.moe.e_padded
-        return cfg.d_ff * d * (3 if cfg.act == "swiglu" else 2)
-
-    if cfg.block_type == "attn":
-        per_layer_total = attn_params() + ffn_params(True)
-        per_layer_active = attn_params() + ffn_params(False)
-        body_total, body_active = L * per_layer_total, L * per_layer_active
-    elif cfg.block_type == "mamba2":
-        s = cfg.ssm
-        d_inner = s.expand * d
-        n_h = d_inner // s.head_dim
-        per = d * (2 * d_inner + 2 * s.n_groups * s.state_dim + n_h) + d_inner * d
-        body_total = body_active = L * per
-    elif cfg.block_type == "rwkv6":
-        r = cfg.rwkv
-        per = 5 * d * d + 2 * d * r.lora_dim * 6 + d * r.d_ff * 2 + d * d
-        body_total = body_active = L * per
-    elif cfg.block_type == "zamba_hybrid":
-        s = cfg.ssm
-        d_inner = s.expand * d
-        n_h = d_inner // s.head_dim
-        per_m = d * (2 * d_inner + 2 * s.n_groups * s.state_dim + n_h) + d_inner * d
-        shared = attn_params() + ffn_params(True)
-        groups = L // cfg.share_every
-        body_total = L * per_m + shared               # ONE shared copy stored
-        body_active = L * per_m + groups * shared     # applied `groups` times
-    else:
-        raise ValueError(cfg.block_type)
-
-    embed = V * d * (1 if cfg.tie_embeddings else 2)
-    if cfg.frontend == "frames":
-        embed = V * d  # head only (inputs are frame embeddings)
-    return {
-        "total": body_total + embed,
-        "active": body_active + embed,
-    }
-
-
-def model_flops(cfg, shape: dict) -> float:
-    """6·N_active·D for a train step; 2·N_active·D for prefill;
-    2·N_active per token for decode (D = tokens processed)."""
-    n_active = count_params(cfg)["active"]
-    b, s = shape["global_batch"], shape["seq_len"]
-    if shape["kind"] == "train":
-        return 6.0 * n_active * b * s
-    if shape["kind"] == "prefill":
-        return 2.0 * n_active * b * s
-    return 2.0 * n_active * b  # decode: one token per sequence

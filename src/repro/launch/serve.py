@@ -8,6 +8,9 @@
   # exercise a live rulebook hot-swap halfway through the client load:
   PYTHONPATH=src python -m repro.launch.serve ... --hot-swap-mid-load \
       --swap-min-support 0.04
+  # supervised dispatch worker + injected mid-load crash (DESIGN.md §11):
+  PYTHONPATH=src python -m repro.launch.serve ... --supervise \
+      --crash-worker-mid-load
   # machine-readable summary (the CI smoke gate reads this):
   PYTHONPATH=src python -m repro.launch.serve ... --json serve-smoke.json
 
@@ -64,9 +67,18 @@ def main():
                     help="re-mine the store and hot-swap the rulebook at half load")
     ap.add_argument("--swap-min-support", type=float, default=None,
                     help="min-support of the re-mine (default: 2x --min-support)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run a WorkerSupervisor over the gateway's dispatch "
+                         "worker (restarts it if it dies, DESIGN.md §11)")
+    ap.add_argument("--crash-worker-mid-load", action="store_true",
+                    help="fault injection: kill the dispatch worker once at "
+                         "half load (requires --supervise to recover)")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write the serving summary as JSON")
     args = ap.parse_args()
+    if args.crash_worker_mid_load and not args.supervise:
+        print("[serve] --crash-worker-mid-load implies --supervise (else the load hangs)")
+        args.supervise = True
 
     import numpy as np
 
@@ -117,13 +129,20 @@ def main():
     import threading
     from concurrent.futures import ThreadPoolExecutor
 
+    from repro.distributed.supervisor import WorkerSupervisor
+    from repro.serving.batcher import WorkerCrashed
+
+    supervisor = None
     with Gateway(rb, impl=args.impl, top_k=args.top_k, max_batch=args.max_batch,
                  max_wait_ms=args.max_wait_ms, queue_depth=args.queue_depth,
                  cache_capacity=args.cache, warmup="ladder") as gw:
+        if args.supervise:
+            supervisor = WorkerSupervisor(gw)
         # a minimal closed-loop client, intentionally independent of
         # benchmarks/load_gen.py: launch/ is importable as repro.launch.*
         # and must not depend on the repo-root `benchmarks` package
         rejected = {"n": 0}
+        crashed = {"n": 0}
         latencies, generations = [], set()
         lock = threading.Lock()
 
@@ -134,6 +153,12 @@ def main():
                 except AdmissionRejected:
                     with lock:
                         rejected["n"] += 1
+                    continue
+                except WorkerCrashed:
+                    # the request was in flight inside the dead worker: failed
+                    # explicitly, safe to retry — matching is read-only
+                    with lock:
+                        crashed["n"] += 1
                     continue
                 with lock:
                     latencies.append(resp.latency_s)
@@ -148,9 +173,26 @@ def main():
         half = args.requests // 2
         print(f"[serve] firing {args.requests} requests from {args.concurrency} "
               f"closed-loop clients ...")
+        if args.crash_worker_mid_load:
+            # one-shot injected worker death: arms at half load below
+            def _arm_crash():
+                once = {"armed": True}
+
+                def hook(batch):
+                    if once["armed"]:
+                        once["armed"] = False
+                        gw._batcher._crash_hook = None
+                        # SystemExit in a thread dies without a stderr traceback
+                        raise SystemExit("injected dispatch-worker death")
+                gw._batcher._crash_hook = hook
         t0 = time.perf_counter()
         with ThreadPoolExecutor(max_workers=args.concurrency) as pool:
-            if args.hot_swap_mid_load:
+            if args.crash_worker_mid_load:
+                fire(half, 0, pool)
+                _arm_crash()
+                print("[serve] armed a dispatch-worker crash; continuing load ...")
+                fire(args.requests - half, half, pool)
+            elif args.hot_swap_mid_load:
                 # re-mine WHILE the first half of the load is live, swap,
                 # then drive the rest against the new generation
                 swap_ms = (2 * args.min_support if args.swap_min_support is None
@@ -168,6 +210,8 @@ def main():
                 fire(args.requests, 0, pool)
         wall = time.perf_counter() - t0
 
+        if supervisor is not None:
+            supervisor.close()
         stats = gw.stats()
 
     lat = np.asarray(sorted(latencies))
@@ -182,13 +226,17 @@ def main():
         "batch_occupancy": stats["batch_occupancy"],
         "cache_hit_rate": stats["cache_hit_rate"],
         "swaps": stats["swaps"],
+        "worker_restarts": stats["worker_restarts"],
+        "crashed_requests": crashed["n"],
         "wall_s": wall,
     }
-    print(f"[serve] {summary['responses']} responses (+{summary['rejected']} rejected) "
+    print(f"[serve] {summary['responses']} responses (+{summary['rejected']} rejected, "
+          f"{summary['crashed_requests']} crashed) "
           f"in {wall:.2f}s = {summary['qps']:,.0f} qps | "
           f"p50={summary['p50_ms']:.2f}ms p95={summary['p95_ms']:.2f}ms "
           f"p99={summary['p99_ms']:.2f}ms | occupancy={summary['batch_occupancy']:.2f} "
-          f"hit_rate={summary['cache_hit_rate']:.2f} | generations={summary['generations']}")
+          f"hit_rate={summary['cache_hit_rate']:.2f} | generations={summary['generations']} "
+          f"worker_restarts={summary['worker_restarts']}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(summary, f, indent=2)

@@ -3,11 +3,11 @@
 Public surface (DESIGN.md §8/§10): compile/load a :class:`Rulebook`, answer
 pre-assembled batches with :func:`recommend`, or serve independent online
 queries through a :class:`Gateway` (micro-batching, exact-basket cache,
-live rulebook hot-swap). The LM-era decode loop lives on only as the
-unexported ``repro.serving.serve_loop`` module.
+live rulebook hot-swap, supervised dispatch worker — see
+``distributed.supervisor``).
 """
 
-from repro.serving.batcher import AdmissionRejected, MicroBatcher, Request
+from repro.serving.batcher import AdmissionRejected, MicroBatcher, Request, WorkerCrashed
 from repro.serving.cache import BasketCache, basket_key
 from repro.serving.gateway import Gateway, Response, pow2_bucket
 from repro.serving.metrics import GatewayMetrics, LatencyHistogram

@@ -17,6 +17,15 @@ Backpressure is explicit: a full queue raises :class:`AdmissionRejected` at
 ``submit`` (counted in metrics) — overload degrades by refusing admission,
 never by silently dropping an accepted request. A dispatch that throws
 resolves every future in the group with that exception for the same reason.
+
+Supervision (DESIGN.md §11): the worker publishes its liveness
+(``worker_alive``) and the batch it is holding (``_inflight``), and
+``restart_worker()`` re-arms a dead worker — the futures of the stranded
+in-flight batch are failed with :class:`WorkerCrashed` (a client sees an
+error, never a hang), every still-QUEUED request survives untouched for the
+fresh worker to drain, and the restart is counted in
+``metrics.worker_restarts``. ``distributed.supervisor.WorkerSupervisor``
+drives this loop.
 """
 
 from __future__ import annotations
@@ -39,6 +48,11 @@ class AdmissionRejected(RuntimeError):
     def __init__(self, reason: str):
         super().__init__(f"request rejected: {reason}")
         self.reason = reason
+
+
+class WorkerCrashed(RuntimeError):
+    """The dispatch worker died while this request was in flight; the
+    request was NOT served (retrying it is safe — matching is read-only)."""
 
 
 @dataclasses.dataclass
@@ -75,6 +89,11 @@ class MicroBatcher:
         # an admitted request is always queued AHEAD of the sentinel, so the
         # worker is guaranteed to reach it — admitted ⇒ resolved
         self._admit_lock = threading.Lock()
+        # _inflight has its OWN lock: the worker must never need the admit
+        # lock (close() holds it across a blocking put while the worker drains)
+        self._inflight_lock = threading.Lock()
+        self._inflight: list = []
+        self._crash_hook = None   # test/fault-injection seam, called in-worker
         self._worker = threading.Thread(target=self._run, name="gateway-batcher", daemon=True)
         self._worker.start()
 
@@ -82,6 +101,15 @@ class MicroBatcher:
     def depth(self) -> int:
         """Requests currently queued (admission-pressure signal)."""
         return self._q.qsize()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def worker_alive(self) -> bool:
+        """Liveness of the dispatch worker — the supervisor's poll target."""
+        return self._worker.is_alive()
 
     def submit(self, request: Request) -> None:
         """Admit one request or raise :class:`AdmissionRejected`."""
@@ -106,15 +134,59 @@ class MicroBatcher:
         The admit lock makes close/submit race-free: the sentinel is
         enqueued strictly after every admitted request, so the worker flushes
         all of them before exiting — no admitted future is ever left hanging.
+        Closing with a DEAD (unsupervised) worker fails the stranded futures
+        explicitly instead of waiting on a join that can never finish.
         """
         with self._admit_lock:
             if self._closed:
                 return
             self._closed = True
+            if not self._worker.is_alive():
+                self._fail_stranded("gateway closed with a dead worker")
+                return
             # blocking put is safe: the worker keeps draining ahead of it,
             # and submitters blocked on the lock will see _closed afterwards
             self._q.put(_SENTINEL)
         self._worker.join(timeout=timeout)
+
+    # -------------------------------------------------------- supervision --
+    def restart_worker(self) -> bool:
+        """Re-arm a dead dispatch worker (the supervisor's repair action).
+
+        The stranded in-flight batch's futures are failed with
+        :class:`WorkerCrashed` — ONLY those; every still-queued request is
+        untouched and drains through the fresh worker. Returns True when a
+        restart happened (counted in ``metrics.worker_restarts``), False if
+        the batcher is closed or the worker turned out to be alive.
+        """
+        with self._admit_lock:
+            if self._closed or self._worker.is_alive():
+                return False
+            self._fail_stranded("dispatch worker crashed mid-batch")
+            self._worker = threading.Thread(
+                target=self._run, name="gateway-batcher", daemon=True
+            )
+            self._worker.start()
+        if self._metrics is not None:
+            self._metrics.record_worker_restart()
+        return True
+
+    def _fail_stranded(self, reason: str) -> None:
+        with self._inflight_lock:
+            stranded, self._inflight = self._inflight, []
+        if self._closed:   # a closed batcher also strands whatever is queued
+            while True:
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    break
+                if item is not _SENTINEL:
+                    stranded.append(item)
+        for r in stranded:
+            if not r.future.done():
+                r.future.set_exception(WorkerCrashed(reason))
+                if self._metrics is not None:
+                    self._metrics.record_response(0.0, failed=True)
 
     # ------------------------------------------------------------- worker --
     def _run(self) -> None:
@@ -137,7 +209,7 @@ class MicroBatcher:
                     stop = True
                     break
                 batch.append(nxt)
-            self._dispatch_batch(batch)
+            self._dispatch_tracked(batch)
         # defensive flush: the admit lock orders every admitted request
         # ahead of the sentinel, so this drain should always be empty
         tail = []
@@ -149,7 +221,23 @@ class MicroBatcher:
             if item is not _SENTINEL:
                 tail.append(item)
         for start in range(0, len(tail), self._max_batch):
-            self._dispatch_batch(tail[start : start + self._max_batch])
+            self._dispatch_tracked(tail[start : start + self._max_batch])
+
+    def _dispatch_tracked(self, batch: list) -> None:
+        """Dispatch with the batch registered as in-flight: if the worker
+        dies anywhere in here, ``restart_worker`` knows exactly which
+        futures were stranded. The crash hook is the fault-injection seam —
+        it runs WITH the batch in flight, so an injected death exercises the
+        real stranding path."""
+        with self._inflight_lock:
+            self._inflight = list(batch)
+        # deliberately NOT try/finally: on a crash the batch must STAY
+        # registered as in-flight so restart_worker can fail its futures
+        if self._crash_hook is not None:
+            self._crash_hook(batch)
+        self._dispatch_batch(batch)
+        with self._inflight_lock:
+            self._inflight = []
 
     def _dispatch_batch(self, batch: list) -> None:
         """Group by top_k (jit-static in the top-k step) and dispatch; a

@@ -95,6 +95,7 @@ class GatewayMetrics:
         self.cache_hits = 0
         self.cache_misses = 0
         self.swaps = 0
+        self.worker_restarts = 0  # dead dispatch workers re-armed (§11)
         self.batches = 0         # dispatches through the match step
         self.batch_rows_real = 0     # requests actually in dispatched batches
         self.batch_rows_padded = 0   # rows of the padded jit buckets
@@ -132,6 +133,10 @@ class GatewayMetrics:
         with self._lock:
             self.swaps += 1
 
+    def record_worker_restart(self) -> None:
+        with self._lock:
+            self.worker_restarts += 1
+
     @property
     def batch_occupancy(self) -> float:
         """Real rows / padded bucket rows over all dispatches (1.0 = full)."""
@@ -152,6 +157,7 @@ class GatewayMetrics:
                 "cache_hits": self.cache_hits,
                 "cache_misses": self.cache_misses,
                 "swaps": self.swaps,
+                "worker_restarts": self.worker_restarts,
                 "batches": self.batches,
                 "batch_rows_real": self.batch_rows_real,
                 "batch_rows_padded": self.batch_rows_padded,

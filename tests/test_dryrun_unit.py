@@ -1,18 +1,12 @@
 """Dry-run machinery unit tests: the HLO static analyzer (trip-count
-correctness against hand-computed FLOPs) and a miniature end-to-end
-lower+compile+analyze on an 8-device mesh (subprocess)."""
-
-import subprocess
-import sys
-import textwrap
+correctness against hand-computed FLOPs and parser coverage). The end-to-end
+lower+compile+analyze path of the MINER is covered by
+``launch.mine_dryrun`` via the quick bench in CI."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_analysis import analyze, parse_hlo
-
-from conftest import REPO_ROOT, subprocess_env
 
 
 
@@ -62,64 +56,3 @@ ENTRY %main (x: f32[8,16]) -> f32[8,8] {
     assert c.flops == 2 * 8 * 8 * 16
     assert c.collective_bytes == 8 * 8 * 4
     assert c.collective_counts == {"all-reduce": 1}
-
-
-_MINI = textwrap.dedent(
-    """
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import jax, jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    from repro.configs import get_config
-    from repro.distributed.sharding import ShardingRules, param_pspecs
-    from repro.launch import hlo_analysis
-    from repro.launch.mesh import make_auto_mesh
-    from repro.models.shard_ctx import activation_sharding
-    from repro.training.optimizer import AdamWConfig
-    from repro.training.train_loop import build_train_step
-    from repro.launch.specs import params_sds, train_state_sds
-
-    mesh = make_auto_mesh((4, 2), ("data", "model"))
-    cfg = get_config("deepseek_coder_33b").reduced(
-        d_model=128, num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
-        compute_dtype="bfloat16", remat=True)
-    rules = ShardingRules()
-    state = train_state_sds(cfg)
-    pspecs = param_pspecs(state["params"], mesh, rules)
-    st_sh = {"params": jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
-                                    is_leaf=lambda s: isinstance(s, P)),
-             "opt": {"m": jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
-                                       is_leaf=lambda s: isinstance(s, P)),
-                     "v": jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
-                                       is_leaf=lambda s: isinstance(s, P)),
-                     "step": NamedSharding(mesh, P())}}
-    batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
-             "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
-    b_sh = jax.tree.map(lambda x: NamedSharding(mesh, P(("data",), None)), batch)
-
-    step = build_train_step(cfg, AdamWConfig())
-    with activation_sharding(mesh, ("data",), "model"):
-        lowered = jax.jit(step, in_shardings=(st_sh, b_sh),
-                          out_shardings=(st_sh, None), donate_argnums=(0,)
-                          ).lower(state, batch)
-    compiled = lowered.compile()
-    mem = compiled.memory_analysis()
-    assert mem.temp_size_in_bytes > 0
-    s = hlo_analysis.summarize(compiled.as_text())
-    assert s["flops"] > 0
-    assert s["collective_counts"], "sharded train step must emit collectives"
-    print("MINI_DRYRUN_OK", int(s["flops"]), sorted(s["collective_counts"]))
-    """
-)
-
-
-def test_mini_dryrun_8dev():
-    proc = subprocess.run(
-        [sys.executable, "-c", _MINI],
-        capture_output=True, text=True, timeout=900,
-        env=subprocess_env(),
-        cwd=REPO_ROOT,
-    )
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    assert "MINI_DRYRUN_OK" in proc.stdout

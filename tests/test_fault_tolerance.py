@@ -1,136 +1,223 @@
-"""Supervisor restart/elastic re-mesh + straggler backup-task simulation."""
+"""Retryable SON partitions (DESIGN.md §11): the bounded-retry /
+speculative work queue in isolation, and mine_son_streamed through it —
+injected map-task failures must not change the mined itemsets, exhausted
+retries must name the partition, skips must be explicit."""
 
-import jax
-import jax.numpy as jnp
+import threading
+import time
+
 import numpy as np
+import pytest
 
-from repro.configs import get_config
+from repro.core import streaming
+from repro.core.apriori import AprioriConfig, mine
+from repro.data import store as st
 from repro.distributed.fault_tolerance import (
-    SimulatedFailure,
-    Supervisor,
-    run_with_backup_tasks,
+    FaultConfig,
+    FaultReport,
+    InjectedFailure,
+    PartitionFailure,
+    run_partitions,
 )
-from repro.training.optimizer import AdamWConfig
-from repro.training.train_loop import build_train_step, init_train_state
+
+CFG = AprioriConfig(min_support=0.05, max_k=4, count_impl="jnp")
 
 
-def _batch_fn(cfg, b=4, s=16):
-    def fn(step):
-        rng = np.random.default_rng(step)
-        toks = rng.integers(0, cfg.vocab_size, (b, s + 1))
-        return {
-            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
-            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
-        }
-
-    return fn
+def _store(small_db, path, shard_rows=80):
+    return st.ingest_dense(small_db, str(path), shard_rows=shard_rows)
 
 
-def test_supervisor_restarts_after_failure(tmp_path):
-    cfg = get_config("deepseek_coder_33b").reduced()
-    opt = AdamWConfig(peak_lr=1e-3)
+def _fail_at(*fail_attempts):
+    """Injector raising on the given (partition, attempt) pairs."""
 
-    def make_mesh(n_nodes):
-        return None  # single-device CPU run; elasticity exercised in subprocess tests
+    def injector(partition, attempt):
+        if (partition, attempt) in fail_attempts:
+            raise InjectedFailure(f"injected loss of partition {partition}")
 
-    def rebuild(mesh, state):
-        return jax.jit(build_train_step(cfg, opt), donate_argnums=())
-
-    killed = {"done": False}
-
-    def injector(step):
-        if step == 7 and not killed["done"]:
-            killed["done"] = True
-            raise SimulatedFailure(lost_nodes=1)
-
-    sup = Supervisor(str(tmp_path), make_mesh, rebuild, checkpoint_every=5)
-    state = init_train_state(jax.random.key(0), cfg)
-    state, history, info = sup.run(
-        state, None, _batch_fn(cfg), num_steps=12, num_nodes=4, failure_injector=injector
-    )
-    assert info["restarts"] == 1
-    assert info["final_nodes"] == 3  # elastic shrink recorded
-    assert int(jax.device_get(state["opt"]["step"])) == 12
-    assert killed["done"]
+    return injector
 
 
-def test_supervisor_resume_matches_uninterrupted(tmp_path):
-    """Failure + restore from checkpoint reproduces the uninterrupted run
-    exactly (deterministic data stream keyed by step count)."""
-    cfg = get_config("deepseek_coder_33b").reduced()
-    opt = AdamWConfig(peak_lr=1e-3)
-
-    def rebuild(mesh, state):
-        return jax.jit(build_train_step(cfg, opt), donate_argnums=())
-
-    base = init_train_state(jax.random.key(0), cfg)
-
-    sup_a = Supervisor(str(tmp_path / "a"), lambda n: None, rebuild, checkpoint_every=5)
-    clean, _, _ = sup_a.run(
-        jax.tree.map(jnp.copy, base), None, _batch_fn(cfg), num_steps=10, num_nodes=2
-    )
-
-    def injector(step):
-        if step == 6 and not getattr(injector, "hit", False):
-            injector.hit = True
-            raise SimulatedFailure()
-
-    sup_b = Supervisor(str(tmp_path / "b"), lambda n: None, rebuild, checkpoint_every=5)
-    failed, _, info = sup_b.run(
-        jax.tree.map(jnp.copy, base), None, _batch_fn(cfg), num_steps=10, num_nodes=2,
-        failure_injector=injector,
-    )
-    assert info["restarts"] == 1
-    for a, b in zip(jax.tree.leaves(clean["params"]), jax.tree.leaves(failed["params"])):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+# ----------------------------------------------------------- the executor --
+def test_run_partitions_no_faults():
+    results, report = run_partitions(lambda p: p * p, 7, FaultConfig(max_workers=3))
+    assert results == [p * p for p in range(7)]
+    assert report.completed == 7 and report.retries == 0
+    assert report.skipped == () and report.total_failures == 0
+    assert report.attempts == {p: 1 for p in range(7)}
 
 
-def test_backup_tasks_cut_straggler_makespan():
-    """Paper Fig 4: heterogeneous cluster (FHDSC) pays the slow node;
-    speculative backups recover most of the gap to homogeneous (FHSSC)."""
-    rng = np.random.default_rng(0)
-    shards = [rng.integers(0, 2, size=(rng.integers(500, 1500), 16)).astype(np.int8) for _ in range(32)]
-
-    def worker(shard):
-        return shard.sum()
-
-    homo = [1.0] * 4
-    hetero = [1.0, 1.0, 1.0, 0.25]  # one 4x-slower node
-
-    res_h, t_homo = run_with_backup_tasks(shards, worker, homo, backup=False)
-    res_n, t_no_backup = run_with_backup_tasks(shards, worker, hetero, backup=False)
-    res_b, t_backup = run_with_backup_tasks(shards, worker, hetero, backup=True)
-
-    # correctness is identical regardless of scheduling
-    assert [int(x) for x in res_h] == [int(x) for x in res_n] == [int(x) for x in res_b]
-    assert t_no_backup > t_homo  # the paper's FHDSC penalty
-    assert t_backup < t_no_backup  # speculation recovers part of it
+def test_run_partitions_empty():
+    results, report = run_partitions(lambda p: p, 0)
+    assert results == [] and report.completed == 0
 
 
-def test_mining_checkpoint_resume(tmp_path, small_db):
-    """Level-wise mining checkpoint: kill at level 2, resume, identical output
-    (the Supervisor pattern applied to the paper's own workload)."""
-    from repro.core.apriori import AprioriConfig, mine
+def test_retries_with_backoff_then_success():
+    fault = FaultConfig(max_retries=2, backoff_s=0.001,
+                        failure_injector=_fail_at((2, 0), (2, 1), (4, 0)))
+    results, report = run_partitions(lambda p: p + 100, 6, fault)
+    assert results == [p + 100 for p in range(6)]
+    assert report.retries == 3
+    assert report.attempts[2] == 3 and report.attempts[4] == 2
+    assert report.skipped == ()
 
-    cfg = AprioriConfig(min_support=0.08, max_k=5, count_impl="jnp")
-    full = mine(small_db, cfg)
 
-    import numpy as _np
+def test_exhausted_raises_naming_partition():
+    fault = FaultConfig(max_retries=1, backoff_s=0.001,
+                        failure_injector=_fail_at((3, 0), (3, 1)))
+    with pytest.raises(PartitionFailure, match="partition 3") as ei:
+        run_partitions(lambda p: p, 5, fault)
+    assert ei.value.partition == 3
+    assert ei.value.attempts == 2
+    assert isinstance(ei.value.cause, InjectedFailure)
 
-    saved = {}
 
-    class Boom(Exception):
-        pass
+def test_skip_mode_records_explicit_gap():
+    fault = FaultConfig(max_retries=1, backoff_s=0.001, on_exhausted="skip",
+                        failure_injector=_fail_at((3, 0), (3, 1)))
+    results, report = run_partitions(lambda p: p * 10, 5, fault)
+    assert results[3] is None
+    assert [r for i, r in enumerate(results) if i != 3] == [0, 10, 20, 40]
+    assert report.skipped == (3,)
+    assert report.total_failures >= 1
 
-    def cb(k, levels):
-        saved["levels"] = {kk: (s.copy(), p.copy()) for kk, (s, p) in levels.items()}
-        saved["next_k"] = k + 1
-        if k == 2:
-            raise Boom
 
-    try:
-        mine(small_db, cfg, checkpoint_cb=cb)
-    except Boom:
-        pass
-    resumed = mine(small_db, cfg, resume_state=saved)
-    assert resumed.as_dict() == full.as_dict()
+def test_worker_exception_is_retried_like_injection():
+    """A real worker_fn exception (shard read error) goes through the same
+    retry policy as an injected one."""
+    calls = {}
+
+    def flaky(p):
+        calls[p] = calls.get(p, 0) + 1
+        if p == 1 and calls[p] == 1:
+            raise OSError("shard read failed")
+        return p
+
+    results, report = run_partitions(flaky, 4, FaultConfig(backoff_s=0.001))
+    assert results == [0, 1, 2, 3]
+    assert report.retries == 1 and calls[1] == 2
+
+
+def test_speculative_reissue_of_straggler():
+    """A partition stuck far past the median completed-task time is re-issued
+    to an idle worker; the re-execution's (fast) completion wins and the
+    stuck twin's late result is discarded."""
+    release = threading.Event()
+    calls = {}
+    lock = threading.Lock()
+
+    def worker(p):
+        with lock:
+            calls[p] = calls.get(p, 0) + 1
+            first = calls[p] == 1
+        if p == 0 and first:
+            # the straggling original copy: parked until its backup finishes
+            # (run_partitions joins every worker, so the BACKUP must be the
+            # one to unpark it — exactly the node-bound-straggler shape)
+            release.wait(timeout=30)
+            time.sleep(0.2)              # lose the completion race for sure
+            return (p, "slow")
+        if p == 0:
+            release.set()                # backup done -> unpark the original
+        return (p, "fast")
+
+    fault = FaultConfig(max_workers=2, speculative=True, speculative_factor=2.0)
+    results, report = run_partitions(worker, 4, fault)
+    assert report.speculative_issued >= 1
+    assert calls[0] >= 2                       # a backup copy really ran
+    assert results[0] == (0, "fast")           # first completion won
+    assert [r[0] for r in results] == [0, 1, 2, 3]
+    assert report.completed == 4
+
+
+def test_fault_config_validation():
+    with pytest.raises(ValueError):
+        FaultConfig(max_retries=-1)
+    with pytest.raises(ValueError):
+        FaultConfig(max_workers=0)
+    with pytest.raises(ValueError):
+        FaultConfig(on_exhausted="explode")
+    r = FaultReport(attempts={0: 2}, retries=1, skipped=(3,))
+    j = r.to_json()
+    assert j["attempts"] == {0: 2} and j["retries"] == 1 and j["skipped"] == [3]
+
+
+# -------------------------------------------- mine_son_streamed through it --
+def test_son_injected_failures_same_itemsets(tmp_path, small_db):
+    """The acceptance criterion: a SON mine whose phase-1 map tasks fail and
+    are re-executed returns EXACTLY the itemsets of a fault-free mine, with
+    the retries counted in the published report."""
+    want = mine(small_db, CFG)
+    s = _store(small_db, tmp_path / "db")
+    assert s.num_partitions >= 4
+    clean = streaming.mine_son_streamed(s, CFG, chunk_rows=64)
+    assert clean.as_dict() == want.as_dict()
+
+    fault = FaultConfig(max_retries=2, backoff_s=0.001, max_workers=2,
+                        failure_injector=_fail_at((0, 0), (0, 1), (3, 0)))
+    got = streaming.mine_son_streamed(s, CFG, chunk_rows=64, fault=fault)
+    assert got.as_dict() == want.as_dict()
+    assert got.fault_report is not None
+    assert got.fault_report.retries == 3
+    assert got.fault_report.skipped == ()
+    assert got.fault_report.completed == s.num_partitions
+
+
+def test_son_fault_free_executor_matches_plain(tmp_path, small_db):
+    """The retrying executor with no injected faults is a pure pass-through:
+    same dict, all partitions single-attempt."""
+    s = _store(small_db, tmp_path / "db")
+    got = streaming.mine_son_streamed(
+        s, CFG, chunk_rows=64, fault=FaultConfig(max_workers=3))
+    assert got.as_dict() == mine(small_db, CFG).as_dict()
+    assert got.fault_report.retries == 0
+    assert got.fault_report.attempts == {p: 1 for p in range(s.num_partitions)}
+
+
+def test_son_exhausted_retries_names_partition(tmp_path, small_db):
+    s = _store(small_db, tmp_path / "db")
+    fault = FaultConfig(max_retries=1, backoff_s=0.001,
+                        failure_injector=_fail_at((1, 0), (1, 1)))
+    with pytest.raises(PartitionFailure, match="partition 1"):
+        streaming.mine_son_streamed(s, CFG, chunk_rows=64, fault=fault)
+
+
+def test_son_skip_mode_reports_gap_explicitly(tmp_path, small_db):
+    """on_exhausted='skip': the mine completes but the dropped partition is
+    in the report — SON's no-false-negative guarantee needs every partition,
+    so the gap must never be silent."""
+    s = _store(small_db, tmp_path / "db")
+    fault = FaultConfig(max_retries=0, backoff_s=0.001, on_exhausted="skip",
+                        failure_injector=_fail_at((2, 0)))
+    got = streaming.mine_son_streamed(s, CFG, chunk_rows=64, fault=fault)
+    assert got.fault_report.skipped == (2,)
+    # phase 2 still counts every surviving candidate exactly over the FULL
+    # db: whatever IS reported is a true frequent itemset with its true
+    # support (the gap can only lose candidates, never corrupt counts)
+    want = mine(small_db, CFG).as_dict()
+    got_d = got.as_dict()
+    assert got_d
+    for itemset, sup in got_d.items():
+        assert want[itemset] == sup
+
+
+def test_son_shard_read_error_retried(tmp_path, small_db, monkeypatch):
+    """A transient shard READ failure (not an injector) is retried by
+    re-loading the shard — the HDFS-split re-execution story end to end."""
+    s = _store(small_db, tmp_path / "db")
+    want = streaming.mine_son_streamed(s, CFG, chunk_rows=64)
+    calls = {}
+    orig = s.partition_dense
+
+    def flaky(p):
+        calls[p] = calls.get(p, 0) + 1
+        if p == 2 and calls[p] == 1:
+            raise OSError("shard 2 read failed")
+        return orig(p)
+
+    monkeypatch.setattr(s, "partition_dense", flaky)
+    got = streaming.mine_son_streamed(
+        s, CFG, chunk_rows=64,
+        fault=FaultConfig(max_retries=2, backoff_s=0.001))
+    assert got.as_dict() == want.as_dict()
+    assert got.fault_report.retries == 1
+    assert calls[2] == 2

@@ -96,36 +96,3 @@ def test_padding_rows_never_count():
         )
     )
     np.testing.assert_array_equal(got, want)
-
-
-def test_flash_attention_ref_vs_naive():
-    """GQA flash oracle vs dense softmax on a decode-offset case."""
-    import jax
-
-    rng = np.random.default_rng(0)
-    q = jnp.asarray(rng.standard_normal((2, 3, 8, 16)), jnp.float32)
-    k = jnp.asarray(rng.standard_normal((2, 10, 4, 16)), jnp.float32)
-    v = jnp.asarray(rng.standard_normal((2, 10, 4, 16)), jnp.float32)
-    out = ref.flash_attention_ref(q, k, v, causal=True)
-    assert out.shape == (2, 3, 8, 16)
-    assert not np.isnan(np.asarray(out)).any()
-    # last query attends over the full kv; first only up to offset
-    full = ref.flash_attention_ref(q[:, -1:], k, v, causal=True)
-    np.testing.assert_allclose(np.asarray(out[:, -1:]), np.asarray(full), rtol=1e-5)
-
-
-@pytest.mark.parametrize("shape", [(1, 32, 4, 16, 4), (2, 24, 6, 32, 3), (1, 100, 8, 64, 2)])
-@pytest.mark.parametrize("causal", [True, False])
-def test_flash_attention_pallas_vs_ref(shape, causal):
-    """Pallas flash attention (interpret) vs fp32 softmax oracle, GQA shapes."""
-    from repro.kernels.flash_attention import flash_attention_pallas
-
-    b, s, h, d, group = shape
-    kvh = h // group
-    rng = np.random.default_rng(s * h)
-    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
-    k = jnp.asarray(rng.standard_normal((b, s, kvh, d)), jnp.float32)
-    v = jnp.asarray(rng.standard_normal((b, s, kvh, d)), jnp.float32)
-    got = flash_attention_pallas(q, k, v, causal=causal, block_q=16, block_k=16, interpret=True)
-    want = ref.flash_attention_ref(q, k, v, causal=causal)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,308 @@
+"""Resumable streamed mining (DESIGN.md §11): checkpoint roundtrip and
+crash-consistency, fingerprint validation, and the acceptance criterion —
+a mine killed at an arbitrary chunk/level boundary and resumed is
+dict-identical to an uninterrupted mine, including a real ``kill -9``."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import streaming
+from repro.core.apriori import AprioriConfig, mine
+from repro.data import store as st
+from repro.distributed.checkpoint import (
+    COMMITTED,
+    CheckpointMismatch,
+    MiningCheckpoint,
+    MiningState,
+    mining_fingerprint,
+    store_fingerprint,
+)
+
+from conftest import REPO_ROOT, subprocess_env
+
+CFG = AprioriConfig(min_support=0.05, max_k=4, count_impl="jnp")
+
+
+def _store(small_db, path, shard_rows=90):
+    return st.ingest_dense(small_db, str(path), shard_rows=shard_rows)
+
+
+def _fps(store, cfg=CFG, chunk_rows=64):
+    return store_fingerprint(store), mining_fingerprint(cfg, chunk_rows)
+
+
+# ------------------------------------------------------- manager mechanics --
+def test_checkpoint_roundtrip_mid_level(tmp_path, small_db):
+    s = _store(small_db, tmp_path / "db")
+    sfp, mfp = _fps(s)
+    mgr = MiningCheckpoint(str(tmp_path / "ck"))
+    levels = {1: (np.arange(6, dtype=np.int32).reshape(6, 1),
+                  np.arange(6, dtype=np.int64) + 40)}
+    state = MiningState(
+        levels=levels, next_k=2, mid_level=True, pass_start=8, chunks_done=3,
+        counts=np.arange(20, dtype=np.int64),
+        acc=np.arange(16, dtype=np.int32),
+    )
+    seq = mgr.save(state, sfp, mfp)
+    mgr.wait()
+    assert mgr.latest_seq() == seq
+    got, manifest = mgr.load_latest()
+    mgr.validate(manifest, sfp, mfp)    # same store + config: accepted
+    assert got.next_k == 2 and got.mid_level
+    assert got.pass_start == 8 and got.chunks_done == 3
+    np.testing.assert_array_equal(got.counts, state.counts)
+    np.testing.assert_array_equal(got.acc, state.acc)
+    np.testing.assert_array_equal(got.levels[1][0], levels[1][0])
+    np.testing.assert_array_equal(got.levels[1][1], levels[1][1])
+
+
+def test_uncommitted_snapshot_is_invisible(tmp_path, small_db):
+    """Crash-consistency: a snapshot directory without the COMMITTED marker
+    (a mid-write kill) must be ignored by load_latest."""
+    s = _store(small_db, tmp_path / "db")
+    sfp, mfp = _fps(s)
+    mgr = MiningCheckpoint(str(tmp_path / "ck"))
+    mgr.save(MiningState(levels={}, next_k=1), sfp, mfp)
+    mgr.wait()
+    good_seq = mgr.latest_seq()
+    # emulate a torn write: seq+1 exists on disk but never committed
+    torn = os.path.join(mgr.path, f"ckpt_{good_seq + 1:08d}")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "manifest.json"), "w") as f:
+        json.dump({"version": 1}, f)
+    assert not os.path.exists(os.path.join(torn, COMMITTED))
+    assert mgr.latest_seq() == good_seq
+    state, _ = mgr.load_latest()
+    assert state.next_k == 1
+    # a NEW manager over the same dir must also sequence past the torn dir
+    mgr2 = MiningCheckpoint(mgr.path)
+    assert mgr2.save(MiningState(levels={}, next_k=2), sfp, mfp) > good_seq + 1
+
+
+def test_retention_keeps_newest(tmp_path, small_db):
+    s = _store(small_db, tmp_path / "db")
+    sfp, mfp = _fps(s)
+    mgr = MiningCheckpoint(str(tmp_path / "ck"), keep=2)
+    for k in range(1, 6):
+        mgr.save(MiningState(levels={}, next_k=k), sfp, mfp)
+    mgr.wait()
+    dirs = sorted(d for d in os.listdir(mgr.path) if d.startswith("ckpt_"))
+    assert len(dirs) == 2
+    state, _ = mgr.load_latest()
+    assert state.next_k == 5
+
+
+@pytest.mark.parametrize("what", ["store", "config", "chunk_rows"])
+def test_validate_rejects_foreign_checkpoint(tmp_path, small_db, what):
+    """Resuming against a different store, result-affecting config, or
+    chunking is an explicit CheckpointMismatch, never a silent wrong answer."""
+    s = _store(small_db, tmp_path / "db")
+    sfp, mfp = _fps(s)
+    mgr = MiningCheckpoint(str(tmp_path / "ck"))
+    mgr.save(MiningState(levels={}, next_k=2), sfp, mfp)
+    mgr.wait()
+    _, manifest = mgr.load_latest()
+    if what == "store":
+        other = _store(small_db[:200], tmp_path / "db2")
+        sfp = store_fingerprint(other)
+    elif what == "config":
+        import dataclasses
+
+        mfp = mining_fingerprint(dataclasses.replace(CFG, min_support=0.1), 64)
+    else:
+        mfp = mining_fingerprint(CFG, 77)
+    with pytest.raises(CheckpointMismatch):
+        mgr.validate(manifest, sfp, mfp)
+
+
+def test_clear_drops_all_snapshots(tmp_path, small_db):
+    s = _store(small_db, tmp_path / "db")
+    sfp, mfp = _fps(s)
+    mgr = MiningCheckpoint(str(tmp_path / "ck"))
+    mgr.save(MiningState(levels={}, next_k=1), sfp, mfp)
+    mgr.clear()
+    assert mgr.load_latest() is None
+
+
+# ------------------------------------------------- in-process kill + resume --
+class _Interrupt(BaseException):
+    """Out-of-band stop that no library code catches."""
+
+
+class _Killing(MiningCheckpoint):
+    """Commits ``stop_after`` snapshots, then dies — the in-process stand-in
+    for a node loss at an arbitrary checkpoint boundary."""
+
+    def __init__(self, path, stop_after):
+        super().__init__(path)
+        self.stop_after = stop_after
+        self.saves = 0
+
+    def save(self, state, store_fp, mine_fp):
+        seq = super().save(state, store_fp, mine_fp)
+        self.saves += 1
+        if self.saves >= self.stop_after:
+            self.wait()   # the snapshot is committed; NOW the "node" dies
+            raise _Interrupt()
+        return seq
+
+
+@pytest.mark.parametrize("rep", ["dense", "packed"])
+@pytest.mark.parametrize("stop_after", [1, 2, 3, 5, 8])
+def test_killed_and_resumed_mine_is_dict_identical(tmp_path, small_db, rep, stop_after):
+    """The acceptance criterion: interrupt at the Nth committed snapshot
+    (mid-level cursors and level boundaries alike, both representations),
+    resume from disk, and the result is dict-identical to an uninterrupted
+    mine AND to the in-memory driver."""
+    import dataclasses
+
+    cfg = dataclasses.replace(CFG, representation=rep)
+    s = _store(small_db, tmp_path / "db")
+    want = streaming.mine_streamed(s, cfg, chunk_rows=64)
+    assert want.as_dict() == mine(small_db, cfg).as_dict()
+
+    ck = str(tmp_path / "ck")
+    killer = _Killing(ck, stop_after)
+    with pytest.raises(_Interrupt):
+        streaming.mine_streamed(
+            s, cfg, chunk_rows=64, checkpoint=killer, checkpoint_every_chunks=1
+        )
+    assert MiningCheckpoint(ck).load_latest() is not None
+    got = streaming.mine_streamed(
+        s, cfg, chunk_rows=64, checkpoint=MiningCheckpoint(ck),
+        checkpoint_every_chunks=1, resume=True,
+    )
+    assert got.as_dict() == want.as_dict()
+    assert got.min_count == want.min_count
+
+
+def test_level_boundary_only_checkpoint_resumes(tmp_path, small_db):
+    """checkpoint_every_chunks=0: snapshots land at level boundaries only;
+    a resume restores the completed levels and re-mines the rest."""
+    s = _store(small_db, tmp_path / "db")
+    want = streaming.mine_streamed(s, CFG, chunk_rows=64)
+    ck = str(tmp_path / "ck")
+    killer = _Killing(ck, stop_after=2)     # dies after committing level 2
+    with pytest.raises(_Interrupt):
+        streaming.mine_streamed(s, CFG, chunk_rows=64, checkpoint=killer)
+    state, _ = MiningCheckpoint(ck).load_latest()
+    assert not state.mid_level and state.next_k == 3
+    got = streaming.mine_streamed(
+        s, CFG, chunk_rows=64, checkpoint=MiningCheckpoint(ck), resume=True
+    )
+    assert got.as_dict() == want.as_dict()
+
+
+def test_resume_rejects_changed_chunking(tmp_path, small_db):
+    s = _store(small_db, tmp_path / "db")
+    ck = str(tmp_path / "ck")
+    killer = _Killing(ck, stop_after=3)
+    with pytest.raises(_Interrupt):
+        streaming.mine_streamed(
+            s, CFG, chunk_rows=64, checkpoint=killer, checkpoint_every_chunks=1
+        )
+    with pytest.raises(CheckpointMismatch):
+        streaming.mine_streamed(
+            s, CFG, chunk_rows=77, checkpoint=MiningCheckpoint(ck),
+            checkpoint_every_chunks=1, resume=True,
+        )
+
+
+def test_resume_without_manager_raises(tmp_path, small_db):
+    s = _store(small_db, tmp_path / "db")
+    with pytest.raises(ValueError, match="resume"):
+        streaming.mine_streamed(s, CFG, resume=True)
+
+
+def test_resume_with_empty_dir_mines_from_scratch(tmp_path, small_db):
+    """resume=True against a checkpoint dir with no committed snapshot is a
+    cold start, not an error — the operator retry loop stays uniform."""
+    s = _store(small_db, tmp_path / "db")
+    got = streaming.mine_streamed(
+        s, CFG, chunk_rows=64, checkpoint=str(tmp_path / "ck"), resume=True
+    )
+    assert got.as_dict() == mine(small_db, CFG).as_dict()
+
+
+def test_fresh_mine_clears_stale_snapshots(tmp_path, small_db):
+    """A NON-resume checkpointed mine must not leave older-mine snapshots
+    interleaved under the same sequence line."""
+    s = _store(small_db, tmp_path / "db")
+    ck = str(tmp_path / "ck")
+    stale = MiningCheckpoint(ck)
+    stale.save(MiningState(levels={}, next_k=9), *_fps(s))
+    stale.wait()
+    streaming.mine_streamed(s, CFG, chunk_rows=64, checkpoint=ck)
+    state, _ = MiningCheckpoint(ck).load_latest()
+    assert state.next_k != 9    # the stale snapshot is gone
+
+
+# ------------------------------------------------------ kill -9 subprocess --
+_KILL9 = textwrap.dedent(
+    """
+    import json, os, signal, sys
+    import numpy as np
+    from repro.core.apriori import AprioriConfig
+    from repro.core.streaming import mine_streamed
+    from repro.data.store import ingest_quest, open_store
+    from repro.data.synthetic import QuestConfig
+    from repro.distributed.checkpoint import MiningCheckpoint, MiningState
+
+    mode, d = sys.argv[1], sys.argv[2]
+    cfg = AprioriConfig(min_support=0.03, max_k=3, count_impl="jnp")
+    if mode == "prep":
+        ingest_quest(QuestConfig(2000, 64, avg_len=9, seed=11), d, shard_rows=256)
+    else:
+        store = open_store(d)
+        if mode == "plain":
+            res = mine_streamed(store, cfg, chunk_rows=128)
+        elif mode == "kill":
+            class Killing(MiningCheckpoint):
+                def save(self, state, sfp, mfp):
+                    seq = super().save(state, sfp, mfp)
+                    if state.mid_level and state.next_k >= 2:
+                        self.wait()
+                        os.kill(os.getpid(), signal.SIGKILL)
+                    return seq
+            mine_streamed(store, cfg, chunk_rows=128,
+                          checkpoint=Killing(store.checkpoint_path),
+                          checkpoint_every_chunks=2)
+            raise SystemExit("unreachable: SIGKILL must have fired")
+        else:   # resume
+            assert MiningCheckpoint(store.checkpoint_path).load_latest() is not None
+            res = mine_streamed(store, cfg, chunk_rows=128, checkpoint=True,
+                                checkpoint_every_chunks=2, resume=True)
+        sig = {k: [v[0].tolist(), v[1].tolist()] for k, v in sorted(res.levels.items())}
+        print("SIG", json.dumps(sig, sort_keys=True))
+    """
+)
+
+
+def test_kill9_subprocess_resume_parity(tmp_path):
+    """A real ``kill -9`` mid-level (no atexit, no finally) and a resume in a
+    FRESH process reproduce the uninterrupted mine exactly."""
+    def run(mode, check=True):
+        proc = subprocess.run(
+            [sys.executable, "-c", _KILL9, mode, str(tmp_path / "db")],
+            capture_output=True, text=True, timeout=600,
+            env=subprocess_env(), cwd=REPO_ROOT,
+        )
+        if check:
+            assert proc.returncode == 0, proc.stderr[-3000:]
+        return proc
+
+    run("prep")
+    plain = run("plain").stdout
+    killed = run("kill", check=False)
+    assert killed.returncode == -9, (killed.returncode, killed.stderr[-2000:])
+    assert "SIG" not in killed.stdout            # it really died mid-mine
+    resumed = run("resume").stdout
+    want = plain[plain.index("SIG"):].strip()
+    got = resumed[resumed.index("SIG"):].strip()
+    assert got == want

@@ -146,3 +146,44 @@ def test_iter_chunks_rejects_bad_args(tmp_path):
         list(s.iter_chunks(0))
     with pytest.raises(ValueError):
         list(s.iter_chunks(4, representation="sparse"))
+
+
+# ------------------------------------------------------- chunk cursor seek ----
+@pytest.mark.parametrize("chunk_rows,shard_rows", [(13, 30), (30, 30), (7, 100), (64, 25)])
+def test_iter_chunks_start_chunk_equals_skipping(tmp_path, chunk_rows, shard_rows):
+    """The resume cursor: iter_chunks(start_chunk=k) yields EXACTLY the
+    chunks a full iteration yields from index k on — same shapes, same
+    valid counts, same bytes — for chunk sizes that cross shard boundaries
+    both ways. This is what makes a checkpointed chunk index replayable."""
+    dense = _rand_dense(100, 37, seed=8)
+    s = st.ingest_dense(dense, str(tmp_path / "db"), shard_rows=shard_rows)
+    full = list(s.iter_chunks(chunk_rows, representation="packed", pad=True))
+    for k in range(len(full) + 1):
+        tail = list(s.iter_chunks(chunk_rows, representation="packed",
+                                  pad=True, start_chunk=k))
+        assert len(tail) == len(full) - k
+        for (want, wv), (got, gv) in zip(full[k:], tail):
+            assert wv == gv
+            assert np.array_equal(want, got)
+
+
+def test_iter_chunks_start_chunk_past_end_is_empty(tmp_path):
+    s = st.ingest_dense(_rand_dense(20, 8), str(tmp_path / "db"), shard_rows=8)
+    assert list(s.iter_chunks(8, start_chunk=100)) == []
+
+
+# ----------------------------------------------------------- checkpoint dir ----
+def test_manifest_checkpoint_dir_and_backward_compat(tmp_path):
+    """New stores record a checkpoint_dir; manifests written BEFORE the
+    fault-tolerance layer (no key) still open, defaulting it."""
+    s = st.ingest_dense(_rand_dense(10, 8), str(tmp_path / "db"), shard_rows=8)
+    assert s.checkpoint_path == os.path.join(s.path, st.DEFAULT_CHECKPOINT_DIR)
+    mpath = os.path.join(s.path, st.MANIFEST_NAME)
+    with open(mpath) as f:
+        d = json.load(f)
+    assert d["checkpoint_dir"] == st.DEFAULT_CHECKPOINT_DIR
+    del d["checkpoint_dir"]                 # a pre-§11 manifest
+    with open(mpath, "w") as f:
+        json.dump(d, f)
+    old = st.open_store(s.path)
+    assert old.checkpoint_path == os.path.join(s.path, st.DEFAULT_CHECKPOINT_DIR)

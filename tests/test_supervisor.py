@@ -1,0 +1,186 @@
+"""Supervised serving (DESIGN.md §11): a dead gateway dispatch worker is
+restarted, ONLY the in-flight batch's futures fail (with WorkerCrashed),
+queued requests survive the restart, and the restart is counted."""
+
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.serving import (
+    GatewayMetrics,
+    MicroBatcher,
+    Request,
+    WorkerCrashed,
+)
+from repro.distributed.supervisor import WorkerSupervisor
+
+# killing the dispatch worker IS the subject under test
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+
+
+def _req(top_k=5):
+    return Request(packed=np.zeros(1, np.uint32), top_k=top_k, future=Future(),
+                   t_submit=time.perf_counter())
+
+
+def _wait_until(pred, timeout=10.0):
+    deadline = time.perf_counter() + timeout
+    while time.perf_counter() < deadline:
+        if pred():
+            return True
+        time.sleep(0.005)
+    return pred()
+
+
+class _FakeGateway:
+    """WorkerSupervisor only touches ``gateway._batcher``."""
+
+    def __init__(self, batcher):
+        self._batcher = batcher
+
+
+def _echo_dispatch(group):
+    for r in group:
+        r.future.set_result(r.top_k)
+
+
+# -------------------------------------------------------- restart_worker --
+def test_restart_fails_only_inflight_futures():
+    """Kill the worker while a batch is in flight: that batch's futures get
+    WorkerCrashed, requests admitted AFTER the crash drain through the fresh
+    worker, and the restart lands in the metric."""
+    metrics = GatewayMetrics()
+    batcher = MicroBatcher(_echo_dispatch, max_batch=4, max_wait_ms=0.0,
+                           queue_depth=64, metrics=metrics)
+    crash_once = {"armed": True}
+
+    def hook(batch):
+        if crash_once["armed"]:
+            crash_once["armed"] = False
+            batcher._crash_hook = None
+            raise SystemExit("injected dispatch-worker death")
+
+    batcher._crash_hook = hook
+    doomed = _req(top_k=1)
+    batcher.submit(doomed)
+    assert _wait_until(lambda: not batcher.worker_alive)
+
+    assert batcher.restart_worker() is True
+    with pytest.raises(WorkerCrashed):
+        doomed.future.result(timeout=10)
+    assert batcher.worker_alive
+
+    served = _req(top_k=7)                 # the fresh worker really dispatches
+    batcher.submit(served)
+    assert served.future.result(timeout=10) == 7
+    batcher.close()
+    assert metrics.worker_restarts == 1
+    assert metrics.failed == 1             # exactly the in-flight request
+    assert "worker_restarts" in metrics.snapshot()
+
+
+def test_queued_requests_survive_restart():
+    """Requests sitting in the admission queue at crash time are NOT failed:
+    they are served by the restarted worker (admitted => resolved)."""
+    gate = {"evt": None}
+
+    def slow_dispatch(group):
+        if gate["evt"] is not None:
+            gate["evt"].wait(timeout=10)
+        _echo_dispatch(group)
+
+    import threading
+
+    gate["evt"] = threading.Event()
+    batcher = MicroBatcher(slow_dispatch, max_batch=1, max_wait_ms=0.0,
+                           queue_depth=64, metrics=GatewayMetrics())
+    armed = {"on": True}
+
+    def hook(batch):
+        if armed["on"]:
+            armed["on"] = False
+            raise SystemExit("boom")
+
+    inflight = _req(top_k=1)
+    queued = [_req(top_k=10 + i) for i in range(5)]
+    batcher._crash_hook = hook
+    batcher.submit(inflight)               # max_batch=1: alone in its batch
+    for r in queued:
+        batcher.submit(r)
+    assert _wait_until(lambda: not batcher.worker_alive)
+    gate["evt"].set()
+    assert batcher.restart_worker() is True
+
+    with pytest.raises(WorkerCrashed):
+        inflight.future.result(timeout=10)
+    for i, r in enumerate(queued):         # every queued request answered
+        assert r.future.result(timeout=10) == 10 + i
+    batcher.close()
+
+
+def test_restart_noop_when_alive_or_closed():
+    batcher = MicroBatcher(_echo_dispatch, max_batch=4, max_wait_ms=0.0)
+    assert batcher.restart_worker() is False      # alive: nothing to do
+    batcher.close()
+    assert batcher.restart_worker() is False      # closed: shutdown != crash
+
+
+def test_close_with_dead_worker_fails_stranded_not_hangs():
+    """An UNsupervised batcher whose worker died must still close promptly,
+    failing the stranded futures instead of joining a dead thread forever."""
+    batcher = MicroBatcher(_echo_dispatch, max_batch=4, max_wait_ms=0.0,
+                           metrics=GatewayMetrics())
+    batcher._crash_hook = lambda batch: (_ for _ in ()).throw(SystemExit("boom"))
+    doomed = _req()
+    batcher.submit(doomed)
+    assert _wait_until(lambda: not batcher.worker_alive)
+    t0 = time.perf_counter()
+    batcher.close()
+    assert time.perf_counter() - t0 < 5.0
+    with pytest.raises(WorkerCrashed):
+        doomed.future.result(timeout=10)
+
+
+# ----------------------------------------------------------- supervisor --
+def test_supervisor_restarts_dead_worker():
+    metrics = GatewayMetrics()
+    batcher = MicroBatcher(_echo_dispatch, max_batch=4, max_wait_ms=0.0,
+                           queue_depth=64, metrics=metrics)
+    armed = {"on": True}
+
+    def hook(batch):
+        if armed["on"]:
+            armed["on"] = False
+            raise SystemExit("injected death")
+
+    batcher._crash_hook = hook
+    with WorkerSupervisor(_FakeGateway(batcher), poll_interval_s=0.005) as sup:
+        doomed = _req(top_k=3)
+        batcher.submit(doomed)
+        with pytest.raises(WorkerCrashed):
+            doomed.future.result(timeout=10)   # supervisor repaired the hang
+        assert _wait_until(lambda: batcher.worker_alive)
+        ok = _req(top_k=9)
+        batcher.submit(ok)
+        assert ok.future.result(timeout=10) == 9
+        assert _wait_until(lambda: sup.restarts == 1)
+    batcher.close()
+    assert metrics.worker_restarts == 1
+
+
+def test_supervisor_treats_shutdown_as_not_a_crash():
+    """After close(), the worker thread exits — the supervisor must NOT
+    count that as a death or try to restart it."""
+    batcher = MicroBatcher(_echo_dispatch, max_batch=4, max_wait_ms=0.0,
+                           metrics=GatewayMetrics())
+    with WorkerSupervisor(_FakeGateway(batcher), poll_interval_s=0.005) as sup:
+        r = _req()
+        batcher.submit(r)
+        assert r.future.result(timeout=10) == r.top_k
+        batcher.close()
+        time.sleep(0.05)                   # give the poll loop a few beats
+        assert sup.restarts == 0
+    assert not batcher.worker_alive
