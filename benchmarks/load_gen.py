@@ -30,12 +30,13 @@ import numpy as np
 from repro.serving import AdmissionRejected
 
 
-def _summarize(latencies, rejected, generations, cached, wall_s) -> dict:
+def _summarize(latencies, rejected, generations, cached, wall_s, failed=0) -> dict:
     lat = np.asarray(sorted(latencies), dtype=np.float64)
     pct = lambda q: float(np.percentile(lat, q)) * 1e3 if lat.size else 0.0
     return {
         "responses": int(lat.size),
         "rejected": int(rejected),
+        "failed": int(failed),
         "cached": int(cached),
         "generations": sorted(generations),
         "wall_s": wall_s,
@@ -47,15 +48,20 @@ def _summarize(latencies, rejected, generations, cached, wall_s) -> dict:
 
 
 def closed_loop(gateway, baskets, *, num_requests: int, concurrency: int,
-                top_k: int = 10) -> dict:
-    """``concurrency`` synchronous clients round-robin over ``baskets``."""
+                top_k: int = 10, tolerate: tuple = ()) -> dict:
+    """``concurrency`` synchronous clients round-robin over ``baskets``.
+
+    ``tolerate`` lists exception types counted into ``failed`` instead of
+    crashing the client thread — the chaos benches pass the router's typed
+    outcomes (``WorkerCrashed``, ``DeadlineExceeded``) so availability is
+    measured, not aborted, while anything untyped still surfaces loudly."""
     counter = itertools.count()
     lock = threading.Lock()
     latencies, generations = [], set()
-    rejected = cached = 0
+    rejected = cached = failed = 0
 
     def client():
-        nonlocal rejected, cached
+        nonlocal rejected, cached, failed
         while True:
             i = next(counter)
             if i >= num_requests:
@@ -65,6 +71,10 @@ def closed_loop(gateway, baskets, *, num_requests: int, concurrency: int,
             except AdmissionRejected:
                 with lock:
                     rejected += 1
+                continue
+            except tolerate:
+                with lock:
+                    failed += 1
                 continue
             with lock:
                 latencies.append(resp.latency_s)
@@ -77,7 +87,7 @@ def closed_loop(gateway, baskets, *, num_requests: int, concurrency: int,
     wall = time.perf_counter() - t0
     for w in workers:           # surface client-thread failures, don't swallow
         w.result()
-    return _summarize(latencies, rejected, generations, cached, wall)
+    return _summarize(latencies, rejected, generations, cached, wall, failed)
 
 
 def open_loop(gateway, baskets, *, rate_qps: float, duration_s: float,

@@ -11,8 +11,10 @@ Three layers, mirroring the paper's Hadoop reliance on task re-execution:
     ``run_partitions`` executes phase-1 mappers through a bounded-retry,
     speculatively re-issuing work queue with explicit failure reporting.
   * :mod:`repro.distributed.supervisor` — supervised serving:
-    ``WorkerSupervisor`` restarts a dead gateway dispatch worker, failing
-    only the in-flight batch's futures.
+    ``WorkerSupervisor`` restarts a dead gateway dispatch worker (failing
+    only the in-flight batch's futures) behind a restart-storm guard;
+    ``ReplicaSetSupervisor`` runs the same loop over a router's N gateway
+    replicas, declaring a storming replica dead.
 """
 
 from repro.distributed.checkpoint import (
@@ -27,6 +29,11 @@ from repro.distributed.fault_tolerance import (
     FaultReport,
     InjectedFailure,
     PartitionFailure,
+    retry_delay,
     run_partitions,
 )
-from repro.distributed.supervisor import WorkerSupervisor
+from repro.distributed.supervisor import (
+    ReplicaSetSupervisor,
+    RestartGuard,
+    WorkerSupervisor,
+)

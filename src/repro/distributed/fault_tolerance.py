@@ -97,6 +97,14 @@ class FaultReport:
         }
 
 
+def retry_delay(fault: FaultConfig, attempt: int) -> float:
+    """Backoff before re-execution ``attempt`` (0-based):
+    ``backoff_s * backoff_multiplier**attempt``. Shared by the partition
+    executor and the serving router's failover path — one retry policy
+    object (:class:`FaultConfig`) drives both."""
+    return fault.backoff_s * fault.backoff_multiplier**attempt
+
+
 class _Task:
     __slots__ = ("idx", "attempt", "speculative")
 
@@ -158,7 +166,7 @@ def run_partitions(
                 if t.attempt < fault.max_retries:
                     report.retries += 1
                     running.pop(t.idx, None)   # restart the straggler clock
-                    delay = fault.backoff_s * fault.backoff_multiplier**t.attempt
+                    delay = retry_delay(fault, t.attempt)
                     retry = _Task(t.idx, t.attempt + 1)
                 else:
                     running.pop(t.idx, None)

@@ -11,6 +11,10 @@
   # supervised dispatch worker + injected mid-load crash (DESIGN.md §11):
   PYTHONPATH=src python -m repro.launch.serve ... --supervise \
       --crash-worker-mid-load
+  # replicated tier (DESIGN.md §12): N replicas behind the failure-aware
+  # router, with an injected replica kill AND a coordinated hot-swap live:
+  PYTHONPATH=src python -m repro.launch.serve ... --replicas 3 \
+      --kill-replica-mid-load --hot-swap-mid-load --deadline-ms 5000
   # machine-readable summary (the CI smoke gate reads this):
   PYTHONPATH=src python -m repro.launch.serve ... --json serve-smoke.json
 
@@ -73,12 +77,27 @@ def main():
     ap.add_argument("--crash-worker-mid-load", action="store_true",
                     help="fault injection: kill the dispatch worker once at "
                          "half load (requires --supervise to recover)")
+    # replicated tier (DESIGN.md §12)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1 serves through the failure-aware Router over N "
+                         "gateway replicas (consistent basket hashing, "
+                         "failover, coordinated hot-swap)")
+    ap.add_argument("--kill-replica-mid-load", action="store_true",
+                    help="fault injection: kill one replica's dispatch worker "
+                         "at half load (implies --replicas >= 2)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; expiry is a typed "
+                         "DeadlineExceeded, counted in the summary")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write the serving summary as JSON")
     args = ap.parse_args()
     if args.crash_worker_mid_load and not args.supervise:
         print("[serve] --crash-worker-mid-load implies --supervise (else the load hangs)")
         args.supervise = True
+    if args.kill_replica_mid_load and args.replicas < 2:
+        print("[serve] --kill-replica-mid-load implies --replicas 2 "
+              "(a lone killed replica has nowhere to fail over)")
+        args.replicas = 2
 
     import numpy as np
 
@@ -86,7 +105,8 @@ def main():
     from repro.core.streaming import mine_streamed
     from repro.data.store import ingest_quest, open_store
     from repro.data.synthetic import QuestConfig
-    from repro.serving import AdmissionRejected, Gateway, compile_rulebook
+    from repro.distributed import FaultConfig
+    from repro.serving import AdmissionRejected, Gateway, Router, compile_rulebook
 
     # ---- 1. load (or ingest) the on-disk store ----
     qcfg = QuestConfig(num_transactions=args.transactions, num_items=args.items,
@@ -130,26 +150,39 @@ def main():
     from concurrent.futures import ThreadPoolExecutor
 
     from repro.distributed.supervisor import WorkerSupervisor
-    from repro.serving.batcher import WorkerCrashed
+    from repro.serving.batcher import DeadlineExceeded, WorkerCrashed
+
+    use_router = args.replicas > 1
+    gateway_kw = dict(impl=args.impl, top_k=args.top_k, max_batch=args.max_batch,
+                      max_wait_ms=args.max_wait_ms, queue_depth=args.queue_depth,
+                      cache_capacity=args.cache, warmup="ladder")
+    if use_router:
+        srv = Router(rb, args.replicas,
+                     fault=FaultConfig(max_retries=3, backoff_s=0.01),
+                     attempt_timeout_s=1.0, **gateway_kw)
+        print(f"[serve] replicated tier: {args.replicas} replicas behind the "
+              f"router (consistent basket hashing, supervised)")
+    else:
+        srv = Gateway(rb, **gateway_kw)
 
     supervisor = None
-    with Gateway(rb, impl=args.impl, top_k=args.top_k, max_batch=args.max_batch,
-                 max_wait_ms=args.max_wait_ms, queue_depth=args.queue_depth,
-                 cache_capacity=args.cache, warmup="ladder") as gw:
-        if args.supervise:
+    with srv as gw:
+        if args.supervise and not use_router:   # the router supervises itself
             supervisor = WorkerSupervisor(gw)
         # a minimal closed-loop client, intentionally independent of
         # benchmarks/load_gen.py: launch/ is importable as repro.launch.*
         # and must not depend on the repo-root `benchmarks` package
         rejected = {"n": 0}
         crashed = {"n": 0}
+        expired = {"n": 0}
         latencies, generations = [], set()
         lock = threading.Lock()
 
         def client(indices):
             for i in indices:
                 try:
-                    resp = gw.submit(baskets[i % len(baskets)]).result(timeout=120)
+                    resp = gw.submit(baskets[i % len(baskets)],
+                                     deadline_ms=args.deadline_ms).result(timeout=120)
                 except AdmissionRejected:
                     with lock:
                         rejected["n"] += 1
@@ -159,6 +192,10 @@ def main():
                     # explicitly, safe to retry — matching is read-only
                     with lock:
                         crashed["n"] += 1
+                    continue
+                except DeadlineExceeded:
+                    with lock:
+                        expired["n"] += 1
                     continue
                 with lock:
                     latencies.append(resp.latency_s)
@@ -185,26 +222,33 @@ def main():
                         # SystemExit in a thread dies without a stderr traceback
                         raise SystemExit("injected dispatch-worker death")
                 gw._batcher._crash_hook = hook
+        mid_load = (args.crash_worker_mid_load or args.kill_replica_mid_load
+                    or args.hot_swap_mid_load)
         t0 = time.perf_counter()
         with ThreadPoolExecutor(max_workers=args.concurrency) as pool:
-            if args.crash_worker_mid_load:
+            if mid_load:
+                miner = None
+                if args.hot_swap_mid_load:
+                    # re-mine WHILE the first half of the load is live, swap,
+                    # then drive the rest against the new generation
+                    swap_ms = (2 * args.min_support if args.swap_min_support is None
+                               else args.swap_min_support)
+                    rb2_box = {}
+                    miner = threading.Thread(
+                        target=lambda: rb2_box.update(rb=mine_rulebook(swap_ms)))
+                    miner.start()
                 fire(half, 0, pool)
-                _arm_crash()
-                print("[serve] armed a dispatch-worker crash; continuing load ...")
-                fire(args.requests - half, half, pool)
-            elif args.hot_swap_mid_load:
-                # re-mine WHILE the first half of the load is live, swap,
-                # then drive the rest against the new generation
-                swap_ms = (2 * args.min_support if args.swap_min_support is None
-                           else args.swap_min_support)
-                rb2_box = {}
-                miner = threading.Thread(
-                    target=lambda: rb2_box.update(rb=mine_rulebook(swap_ms)))
-                miner.start()
-                fire(half, 0, pool)
-                miner.join()
-                gen = gw.hot_swap(rb2_box["rb"])
-                print(f"[serve] hot-swapped to generation {gen} with traffic live")
+                if args.crash_worker_mid_load:
+                    _arm_crash()
+                    print("[serve] armed a dispatch-worker crash; continuing load ...")
+                if args.kill_replica_mid_load:
+                    gw.fault_injection.kill_replica(0)
+                    print("[serve] armed a replica-0 worker kill; continuing load ...")
+                if miner is not None:
+                    miner.join()
+                    gen = gw.hot_swap(rb2_box["rb"])
+                    kind = "coordinated two-phase" if use_router else "hot"
+                    print(f"[serve] {kind}-swapped to generation {gen} with traffic live")
                 fire(args.requests - half, half, pool)
             else:
                 fire(args.requests, 0, pool)
@@ -212,10 +256,36 @@ def main():
 
         if supervisor is not None:
             supervisor.close()
+        if use_router:
+            # let the health monitor finish reviving killed replicas so the
+            # summary reports the RECOVERED replica set
+            settle_until = time.perf_counter() + 5.0
+            while time.perf_counter() < settle_until:
+                states = [r["state"] for r in gw.stats()["replicas"]]
+                if all(s == "healthy" for s in states):
+                    break
+                time.sleep(0.02)
         stats = gw.stats()
 
     lat = np.asarray(sorted(latencies))
     pct = lambda q: float(np.percentile(lat, q)) * 1e3 if lat.size else 0.0
+    if use_router:
+        # aggregate the per-replica gateway views into the single-gateway
+        # summary shape (CI reads the same fields either way)
+        gws = [r["gateway"] for r in stats["replicas"]]
+        rows_real = sum(g["batch_rows_real"] for g in gws)
+        rows_padded = sum(g["batch_rows_padded"] for g in gws)
+        hits = sum(g["cache_hits"] for g in gws)
+        misses = sum(g["cache_misses"] for g in gws)
+        agg = {
+            "batch_occupancy": rows_real / rows_padded if rows_padded else 0.0,
+            "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+            "swaps": stats["coordinated_swaps"],
+            "worker_restarts": sum(g["worker_restarts"] for g in gws),
+        }
+    else:
+        agg = {k: stats[k] for k in
+               ("batch_occupancy", "cache_hit_rate", "swaps", "worker_restarts")}
     summary = {
         "requests": args.requests,
         "responses": int(lat.size),
@@ -223,20 +293,38 @@ def main():
         "generations": sorted(int(g) for g in generations),
         "qps": lat.size / wall if wall > 0 else 0.0,
         "p50_ms": pct(50), "p95_ms": pct(95), "p99_ms": pct(99),
-        "batch_occupancy": stats["batch_occupancy"],
-        "cache_hit_rate": stats["cache_hit_rate"],
-        "swaps": stats["swaps"],
-        "worker_restarts": stats["worker_restarts"],
+        **agg,
         "crashed_requests": crashed["n"],
+        "deadline_expired_requests": expired["n"],
         "wall_s": wall,
     }
+    if use_router:
+        terminal = lat.size + rejected["n"] + crashed["n"] + expired["n"]
+        summary.update({
+            "replicas": args.replicas,
+            "replica_states": [r["state"] for r in stats["replicas"]],
+            "replica_generations": [r["generation"] for r in stats["replicas"]],
+            "failovers": stats["failovers"],
+            "shed": stats["shed"],
+            "resyncs": stats["resyncs"],
+            "max_generation_lag": stats["max_generation_lag"],
+            "kills_fired": srv.fault_injection.kills_fired,
+            "availability": lat.size / terminal if terminal else 0.0,
+        })
     print(f"[serve] {summary['responses']} responses (+{summary['rejected']} rejected, "
-          f"{summary['crashed_requests']} crashed) "
+          f"{summary['crashed_requests']} crashed, "
+          f"{summary['deadline_expired_requests']} expired) "
           f"in {wall:.2f}s = {summary['qps']:,.0f} qps | "
           f"p50={summary['p50_ms']:.2f}ms p95={summary['p95_ms']:.2f}ms "
           f"p99={summary['p99_ms']:.2f}ms | occupancy={summary['batch_occupancy']:.2f} "
           f"hit_rate={summary['cache_hit_rate']:.2f} | generations={summary['generations']} "
           f"worker_restarts={summary['worker_restarts']}")
+    if use_router:
+        print(f"[serve] router: states={summary['replica_states']} "
+              f"gens={summary['replica_generations']} "
+              f"failovers={summary['failovers']} shed={summary['shed']} "
+              f"resyncs={summary['resyncs']} kills={summary['kills_fired']} "
+              f"availability={summary['availability']:.4f}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(summary, f, indent=2)

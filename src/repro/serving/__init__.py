@@ -1,16 +1,25 @@
 """The Apriori serving stack: rulebook -> batch engine -> online gateway.
 
-Public surface (DESIGN.md §8/§10): compile/load a :class:`Rulebook`, answer
-pre-assembled batches with :func:`recommend`, or serve independent online
+Public surface (DESIGN.md §8/§10/§12): compile/load a :class:`Rulebook`,
+answer pre-assembled batches with :func:`recommend`, serve independent online
 queries through a :class:`Gateway` (micro-batching, exact-basket cache,
 live rulebook hot-swap, supervised dispatch worker — see
-``distributed.supervisor``).
+``distributed.supervisor``), or front N gateway replicas with a
+:class:`Router` (consistent basket hashing, failover with bounded retries,
+request deadlines, load shedding, coordinated two-phase hot-swap).
 """
 
-from repro.serving.batcher import AdmissionRejected, MicroBatcher, Request, WorkerCrashed
+from repro.serving.batcher import (
+    AdmissionRejected,
+    DeadlineExceeded,
+    MicroBatcher,
+    Request,
+    WorkerCrashed,
+)
 from repro.serving.cache import BasketCache, basket_key
 from repro.serving.gateway import Gateway, Response, pow2_bucket
-from repro.serving.metrics import GatewayMetrics, LatencyHistogram
+from repro.serving.metrics import GatewayMetrics, LatencyHistogram, RouterMetrics
+from repro.serving.router import HashRing, Router, RouterFaultInjection
 from repro.serving.recommend import (
     RecommendResult,
     make_match_step,

@@ -17,6 +17,9 @@ Backpressure is explicit: a full queue raises :class:`AdmissionRejected` at
 ``submit`` (counted in metrics) — overload degrades by refusing admission,
 never by silently dropping an accepted request. A dispatch that throws
 resolves every future in the group with that exception for the same reason.
+A request carrying a ``deadline`` that passes while it sits in the queue is
+dropped at dispatch time with :class:`DeadlineExceeded` (DESIGN.md §12) —
+the device never works for a caller that has already given up.
 
 Supervision (DESIGN.md §11): the worker publishes its liveness
 (``worker_alive``) and the batch it is holding (``_inflight``), and
@@ -55,6 +58,12 @@ class WorkerCrashed(RuntimeError):
     request was NOT served (retrying it is safe — matching is read-only)."""
 
 
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed before it was served. Expired requests
+    are dropped at DISPATCH time — a request whose caller has given up never
+    spends device time — and their futures fail with this, never hang."""
+
+
 @dataclasses.dataclass
 class Request:
     """One admitted basket query travelling through the batcher."""
@@ -63,6 +72,8 @@ class Request:
     top_k: int
     future: Future            # resolves to a gateway Response
     t_submit: float           # perf_counter at admission (latency accounting)
+    deadline: float | None = None   # absolute perf_counter time; expired
+                                    # requests are dropped at dispatch
 
 
 class MicroBatcher:
@@ -223,12 +234,36 @@ class MicroBatcher:
         for start in range(0, len(tail), self._max_batch):
             self._dispatch_tracked(tail[start : start + self._max_batch])
 
+    def _drop_expired(self, batch: list) -> list:
+        """Fail past-deadline requests with :class:`DeadlineExceeded` at
+        dispatch time — the queue bounds a caller's WAIT via
+        ``future.result(timeout)``, but only this bounds the REQUEST: an
+        abandoned query must not spend device time."""
+        now = time.perf_counter()
+        live = []
+        for r in batch:
+            if r.deadline is not None and now >= r.deadline:
+                if not r.future.done():
+                    r.future.set_exception(DeadlineExceeded(
+                        f"deadline passed {(now - r.deadline) * 1e3:.1f} ms "
+                        f"before dispatch (queued {(now - r.t_submit) * 1e3:.1f} ms)"
+                    ))
+                    if self._metrics is not None:
+                        self._metrics.record_deadline_expired()
+                        self._metrics.record_response(0.0, failed=True)
+            else:
+                live.append(r)
+        return live
+
     def _dispatch_tracked(self, batch: list) -> None:
         """Dispatch with the batch registered as in-flight: if the worker
         dies anywhere in here, ``restart_worker`` knows exactly which
         futures were stranded. The crash hook is the fault-injection seam —
         it runs WITH the batch in flight, so an injected death exercises the
         real stranding path."""
+        batch = self._drop_expired(batch)
+        if not batch:
+            return
         with self._inflight_lock:
             self._inflight = list(batch)
         # deliberately NOT try/finally: on a crash the batch must STAY

@@ -131,7 +131,7 @@ class Gateway:
 
         self.metrics = GatewayMetrics()
         self.cache = BasketCache(cache_capacity)
-        self._swap_lock = threading.Lock()
+        self._swap_lock = threading.RLock()
         self._generation = self._place(0, rulebook)
         if warmup:
             self._warm(self._generation)
@@ -156,13 +156,17 @@ class Gateway:
         self.close()
 
     # ----------------------------------------------------------- requests --
-    def submit(self, basket, top_k: int | None = None):
+    def submit(self, basket, top_k: int | None = None, deadline_ms: float | None = None):
         """Admit one basket query; returns a Future[:class:`Response`].
 
         ``basket``: item-id list/tuple/1-D int array, or a pre-packed (W,)
         uint32 bitset row. Raises :class:`AdmissionRejected` when the queue
         is full or the gateway is closed — overload is reported, not
-        silently dropped.
+        silently dropped. ``deadline_ms`` bounds the REQUEST, not just the
+        caller's wait: a request still queued when its deadline passes is
+        dropped at dispatch time with
+        :class:`~repro.serving.batcher.DeadlineExceeded` instead of
+        spending device time on abandoned work.
         """
         if self._closed:
             self.metrics.record_admission(False)
@@ -184,7 +188,9 @@ class Gateway:
             fut.set_result(Response(items, scores, answered_by, True, latency, bucket))
             return fut
 
-        req = Request(packed=packed, top_k=k, future=Future(), t_submit=t0)
+        deadline = None if deadline_ms is None else t0 + max(0.0, float(deadline_ms)) / 1e3
+        req = Request(packed=packed, top_k=k, future=Future(), t_submit=t0,
+                      deadline=deadline)
         self._batcher.submit(req)   # raises AdmissionRejected on overload
         # hit/miss is counted only for admitted requests, and on BOTH the
         # cache's and the gateway metrics' counters — the two published
@@ -193,31 +199,53 @@ class Gateway:
         self.metrics.record_cache(False)
         return req.future
 
-    def query(self, basket, top_k: int | None = None, timeout: float | None = 60.0) -> Response:
+    def query(self, basket, top_k: int | None = None, timeout: float | None = 60.0,
+              deadline_ms: float | None = None) -> Response:
         """Blocking convenience wrapper: ``submit(...).result(timeout)``."""
-        return self.submit(basket, top_k).result(timeout)
+        return self.submit(basket, top_k, deadline_ms=deadline_ms).result(timeout)
 
     # ----------------------------------------------------------- hot-swap --
-    def hot_swap(self, rulebook: Rulebook) -> int:
-        """Atomically replace the serving rulebook; returns the new
-        generation id. The incoming rulebook is device-placed and (when
-        ``warmup``) compiled against the bucket ladder BEFORE the pointer
-        swap, so requests never stall on it; requests already dispatched or
-        queued resolve normally — a response's ``generation`` says which
-        rulebook answered.
+    def prepare_swap(self, rulebook: Rulebook, generation: int | None = None) -> "_Generation":
+        """Phase 1 of the two-phase swap protocol (§12): device-place and
+        (when ``warmup``) bucket-ladder-compile the incoming rulebook WITHOUT
+        flipping the serving reference — both generations resident. Returns
+        the prepared generation record for :meth:`commit_swap`. A failure
+        here leaves serving untouched (the old generation keeps answering).
+
+        ``generation`` pins the new generation id — the router uses this to
+        keep ids aligned across replicas so a replica that missed a swap can
+        re-sync straight to the coordinated target id.
         """
         if rulebook.num_items != self.num_items:
             raise ValueError(
                 f"hot-swap rulebook has {rulebook.num_items} items, gateway "
                 f"serves {self.num_items} — vocabulary must be stable across swaps"
             )
+        gen_id = self._generation.generation + 1 if generation is None else int(generation)
+        gen = self._place(gen_id, rulebook)
+        if self._warmup_enabled:
+            self._warm(gen)              # double-buffer: compile before commit
+        return gen
+
+    def commit_swap(self, prepared: "_Generation") -> int:
+        """Phase 2: flip the serving reference to a prepared generation —
+        one atomic store, same zero-drop/zero-mix contract as
+        :meth:`hot_swap`."""
         with self._swap_lock:
-            gen = self._place(self._generation.generation + 1, rulebook)
-            if self._warmup_enabled:
-                self._warm(gen)          # double-buffer: compile before swap
-            self._generation = gen       # the atomic store
+            self._generation = prepared  # the atomic store
             self.metrics.record_swap()
-            return gen.generation
+            return prepared.generation
+
+    def hot_swap(self, rulebook: Rulebook) -> int:
+        """Atomically replace the serving rulebook; returns the new
+        generation id. Prepare (place + warm, double-buffered) then commit —
+        requests never stall on the incoming rulebook; requests already
+        dispatched or queued resolve normally, and a response's
+        ``generation`` says which rulebook answered.
+        """
+        with self._swap_lock:    # RLock: serializes concurrent hot_swaps so
+            # two callers can never mint the same generation id
+            return self.commit_swap(self.prepare_swap(rulebook))
 
     @property
     def generation(self) -> int:

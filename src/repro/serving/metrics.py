@@ -95,6 +95,7 @@ class GatewayMetrics:
         self.cache_hits = 0
         self.cache_misses = 0
         self.swaps = 0
+        self.deadline_expired = 0  # requests dropped past-deadline at dispatch
         self.worker_restarts = 0  # dead dispatch workers re-armed (§11)
         self.batches = 0         # dispatches through the match step
         self.batch_rows_real = 0     # requests actually in dispatched batches
@@ -133,6 +134,10 @@ class GatewayMetrics:
         with self._lock:
             self.swaps += 1
 
+    def record_deadline_expired(self) -> None:
+        with self._lock:
+            self.deadline_expired += 1
+
     def record_worker_restart(self) -> None:
         with self._lock:
             self.worker_restarts += 1
@@ -157,6 +162,7 @@ class GatewayMetrics:
                 "cache_hits": self.cache_hits,
                 "cache_misses": self.cache_misses,
                 "swaps": self.swaps,
+                "deadline_expired": self.deadline_expired,
                 "worker_restarts": self.worker_restarts,
                 "batches": self.batches,
                 "batch_rows_real": self.batch_rows_real,
@@ -164,5 +170,102 @@ class GatewayMetrics:
             }
         out["batch_occupancy"] = self.batch_occupancy
         out["cache_hit_rate"] = self.cache_hit_rate
+        out["latency"] = self.latency.snapshot()
+        return out
+
+
+class RouterMetrics:
+    """Replica-router counters + the router-level latency histogram (§12).
+
+    Router latency is submit → terminal outcome INCLUDING failover retries
+    and backoff, so it is an end-to-end client view; a replica gateway's own
+    histogram sees only the attempts that reached it."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.latency = LatencyHistogram()
+        self.routed = 0            # requests accepted by the router
+        self.completed = 0         # outer futures resolved with a Response
+        self.failed = 0            # outer futures resolved with an exception
+        self.shed = 0              # refused: every candidate replica dead/saturated
+        self.failovers = 0         # re-submissions to another replica
+        self.attempt_timeouts = 0  # attempts abandoned as unresponsive
+        self.deadline_failed = 0   # outer futures failed with DeadlineExceeded
+        self.retries_exhausted = 0 # outer futures failed after the retry budget
+        self.resyncs = 0           # lagging replicas re-synced to the target gen
+        self.swap_prepare_failures = 0  # replicas that failed two-phase prepare
+        self.coordinated_swaps = 0      # successful two-phase hot-swaps
+        self.replica_deaths = 0         # replicas declared dead (restart storm)
+        self.max_generation_lag = 0     # peak (target - replica) generation gap
+        self.current_generation_lag = 0
+
+    def record_routed(self) -> None:
+        with self._lock:
+            self.routed += 1
+
+    def record_completed(self, latency_s: float) -> None:
+        with self._lock:
+            self.completed += 1
+        self.latency.record(latency_s)
+
+    def record_failed(self, *, deadline: bool = False, exhausted: bool = False) -> None:
+        with self._lock:
+            self.failed += 1
+            if deadline:
+                self.deadline_failed += 1
+            if exhausted:
+                self.retries_exhausted += 1
+
+    def record_shed(self) -> None:
+        with self._lock:
+            self.shed += 1
+
+    def record_failover(self) -> None:
+        with self._lock:
+            self.failovers += 1
+
+    def record_attempt_timeout(self) -> None:
+        with self._lock:
+            self.attempt_timeouts += 1
+
+    def record_resync(self) -> None:
+        with self._lock:
+            self.resyncs += 1
+
+    def record_swap_prepare_failure(self) -> None:
+        with self._lock:
+            self.swap_prepare_failures += 1
+
+    def record_coordinated_swap(self) -> None:
+        with self._lock:
+            self.coordinated_swaps += 1
+
+    def record_replica_death(self) -> None:
+        with self._lock:
+            self.replica_deaths += 1
+
+    def observe_generation_lag(self, lag: int) -> None:
+        with self._lock:
+            self.current_generation_lag = lag
+            self.max_generation_lag = max(self.max_generation_lag, lag)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            out = {
+                "routed": self.routed,
+                "completed": self.completed,
+                "failed": self.failed,
+                "shed": self.shed,
+                "failovers": self.failovers,
+                "attempt_timeouts": self.attempt_timeouts,
+                "deadline_failed": self.deadline_failed,
+                "retries_exhausted": self.retries_exhausted,
+                "resyncs": self.resyncs,
+                "swap_prepare_failures": self.swap_prepare_failures,
+                "coordinated_swaps": self.coordinated_swaps,
+                "replica_deaths": self.replica_deaths,
+                "max_generation_lag": self.max_generation_lag,
+                "current_generation_lag": self.current_generation_lag,
+            }
         out["latency"] = self.latency.snapshot()
         return out

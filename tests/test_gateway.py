@@ -337,3 +337,55 @@ def test_pow2_bucket_ladder():
         pow2_bucket(0, 64)
     with pytest.raises(ValueError):
         pow2_bucket(65, 64)
+
+
+# --------------------------------------------------------------- deadlines --
+def test_batcher_drops_expired_requests_at_dispatch():
+    """A request whose deadline passed while queued is failed with
+    DeadlineExceeded at dispatch time — the device never works for a caller
+    that has given up — while live requests in the same batch are served."""
+    from repro.serving import DeadlineExceeded
+
+    metrics = GatewayMetrics()
+    served = []
+
+    def dispatch(group):
+        for r in group:
+            served.append(r.top_k)
+            r.future.set_result(r.top_k)
+
+    batcher = MicroBatcher(dispatch, max_batch=8, max_wait_ms=0.0,
+                           queue_depth=16, metrics=metrics)
+    now = time.perf_counter()
+    expired = Request(packed=np.zeros(1, np.uint32), top_k=1, future=Future(),
+                      t_submit=now, deadline=now - 0.001)      # already past
+    live = Request(packed=np.zeros(1, np.uint32), top_k=2, future=Future(),
+                   t_submit=now, deadline=now + 30.0)
+    batcher.submit(expired)
+    batcher.submit(live)
+    assert live.future.result(timeout=10) == 2
+    with pytest.raises(DeadlineExceeded):
+        expired.future.result(timeout=10)
+    batcher.close()
+    assert served == [2]                       # expired never dispatched
+    assert metrics.deadline_expired == 1
+    assert metrics.failed == 1
+    assert metrics.snapshot()["deadline_expired"] == 1
+
+
+def test_gateway_deadline_ms_bounds_the_request(rulebooks, baskets):
+    """deadline_ms=0 expires in the queue (typed failure, counted);
+    a generous deadline serves normally and stays bit-identical."""
+    from repro.serving import DeadlineExceeded
+
+    rb0, _ = rulebooks
+    with Gateway(rb0, max_wait_ms=0.0, warmup=False, cache_capacity=0) as gw:
+        gw.query(baskets[0])                   # compile off the clock
+        ok = gw.query(baskets[1], deadline_ms=30_000)
+        check_response(ok, rb0, baskets[1], gw.default_top_k)
+        with pytest.raises(DeadlineExceeded):
+            gw.query(baskets[2], deadline_ms=0)
+        s = gw.stats()
+        assert s["deadline_expired"] == 1
+        # deadline expiry is an explicit failure, never a silent drop
+        assert s["completed"] == 2 and s["failed"] == 1

@@ -184,3 +184,114 @@ def test_supervisor_treats_shutdown_as_not_a_crash():
         time.sleep(0.05)                   # give the poll loop a few beats
         assert sup.restarts == 0
     assert not batcher.worker_alive
+
+
+# -------------------------------------------------------- restart storm --
+def test_restart_guard_window_backoff_and_give_up():
+    from repro.distributed.supervisor import RestartGuard
+
+    g = RestartGuard(max_restarts=3, window_s=10.0, backoff_s=0.5,
+                     backoff_multiplier=2.0)
+    assert g.allow(100.0)
+    g.record(100.0)
+    assert not g.allow(100.1)            # inside the 0.5 s backoff
+    assert g.allow(100.6)
+    g.record(100.6)
+    assert not g.allow(101.0)            # backoff doubled to 1.0 s
+    assert g.allow(101.7)
+    g.record(101.7)
+    assert not g.allow(105.0)            # window holds 3 == max: storm
+    assert g.gave_up
+    assert not g.allow(1000.0)           # permanent: no resurrection
+    with pytest.raises(ValueError):
+        RestartGuard(max_restarts=0)
+
+
+def test_restart_guard_window_slides():
+    from repro.distributed.supervisor import RestartGuard
+
+    g = RestartGuard(max_restarts=2, window_s=1.0, backoff_s=0.0)
+    g.record(100.0)
+    g.record(100.1)
+    assert g.allow(101.5)                # both restarts aged out: budget back
+    assert not g.gave_up
+
+
+def test_supervisor_declares_always_crashing_worker_dead():
+    """A worker that crashes on EVERY dispatch must not be restarted
+    forever: after max_restarts within the window the supervisor declares it
+    dead, closes the batcher (pending futures fail explicitly, new submits
+    are refused), and surfaces the verdict in stats()."""
+    metrics = GatewayMetrics()
+    batcher = MicroBatcher(_echo_dispatch, max_batch=1, max_wait_ms=0.0,
+                           queue_depth=64, metrics=metrics)
+    batcher._crash_hook = lambda batch: (_ for _ in ()).throw(
+        SystemExit("poisoned: crashes on every dispatch"))
+    requests = [_req(top_k=i) for i in range(8)]   # max_batch=1: each wave
+    for r in requests:                             # re-feeds the fresh worker
+        batcher.submit(r)
+
+    with WorkerSupervisor(_FakeGateway(batcher), poll_interval_s=0.005,
+                          max_restarts=3, restart_window_s=30.0,
+                          restart_backoff_s=0.005) as sup:
+        assert _wait_until(lambda: sup.dead, timeout=30.0)
+        assert sup.restarts == 3                   # budget spent, then dead
+        s = sup.stats()
+        assert s["dead"] is True and s["restarts"] == 3
+        # every pending future failed explicitly — no hangs, no silent drops
+        for r in requests:
+            with pytest.raises(WorkerCrashed):
+                r.future.result(timeout=10)
+        # the dead replica sheds load instead of hanging it
+        from repro.serving import AdmissionRejected
+        with pytest.raises(AdmissionRejected):
+            batcher.submit(_req())
+        assert batcher.closed
+
+
+def test_replica_set_supervisor_restarts_and_gives_up_per_replica():
+    """One poll loop over N batchers: the crashed-once replica is revived,
+    the always-crashing one burns its budget and is declared dead — with the
+    owner notified through the callbacks."""
+    import threading
+
+    good_metrics, bad_metrics = GatewayMetrics(), GatewayMetrics()
+    good = MicroBatcher(_echo_dispatch, max_batch=1, max_wait_ms=0.0,
+                        queue_depth=64, metrics=good_metrics)
+    bad = MicroBatcher(_echo_dispatch, max_batch=1, max_wait_ms=0.0,
+                       queue_depth=64, metrics=bad_metrics)
+    once = {"armed": True}
+
+    def crash_once(batch):
+        if once["armed"]:
+            once["armed"] = False
+            raise SystemExit("transient")
+
+    good._crash_hook = crash_once
+    bad._crash_hook = lambda batch: (_ for _ in ()).throw(SystemExit("poisoned"))
+
+    restarted, gave_up = [], []
+    from repro.distributed import ReplicaSetSupervisor
+
+    with ReplicaSetSupervisor(
+        [_FakeGateway(good), _FakeGateway(bad)], poll_interval_s=0.005,
+        max_restarts=2, restart_window_s=30.0, restart_backoff_s=0.005,
+        on_restarted=restarted.append, on_gave_up=gave_up.append,
+    ) as sup:
+        doomed = _req(top_k=1)
+        good.submit(doomed)                    # crashes once, then revived
+        for i in range(6):
+            bad.submit(_req(top_k=i))          # keeps crashing until dead
+        with pytest.raises(WorkerCrashed):
+            doomed.future.result(timeout=10)
+        ok = _req(top_k=9)
+        _wait_until(lambda: good.worker_alive)
+        good.submit(ok)
+        assert ok.future.result(timeout=10) == 9   # replica 0 fully revived
+        assert _wait_until(lambda: sup.dead == [False, True], timeout=30.0)
+        s = sup.stats()
+        assert s["dead"] == [False, True]
+        assert s["restarts"][1] == 2
+        assert 0 in restarted and gave_up == [1]
+    good.close()
+    assert bad.closed                          # closed by the give-up path
