@@ -637,6 +637,133 @@ def bench_fault_tolerance(quick=False):
         shutil.rmtree(d, ignore_errors=True)
 
 
+# ------------------------------------------------------------- observability ----
+_OBS_SCRIPT = r"""
+import hashlib, json, sys, time
+store_dir, chunk = sys.argv[1], int(sys.argv[2])
+import jax  # noqa: F401  (import before measuring: exclude the runtime arena)
+from repro.core.apriori import AprioriConfig
+from repro.core.streaming import mine_streamed
+from repro.data.store import open_store
+from repro.obs import MetricsRegistry, MiningObs, Tracer
+cfg = AprioriConfig(min_support=0.02, max_k=3, count_impl="jnp", representation="packed")
+store = open_store(store_dir)
+
+def sig(res):
+    blob = json.dumps(sorted(
+        (k, res.levels[k][0].tolist(), res.levels[k][1].tolist()) for k in res.levels
+    ))
+    return hashlib.md5(blob.encode()).hexdigest()
+
+# Both modes run INTERLEAVED in this one process: machine-state drift (load,
+# page cache) hits both equally, and the shared jit cache means each
+# plain/obs pair isolates pure instrumentation overhead — the thing the
+# gate bounds.  A single ~0.8 s streamed mine jitters by several percent
+# from one-off spikes (GC, scheduler), so the overhead is the ratio of
+# MINIMA over 5 reps each — min is the spike-free estimate of true runtime.
+times = {"plain": [], "obs": []}
+sigs, counters = {}, None
+for rep in range(5):
+    for mode in ("plain", "obs"):
+        obs = None
+        if mode == "obs":      # fresh counters per rep: no cross-run doubling
+            obs = MiningObs(registry=MetricsRegistry(), tracer=Tracer(sample_rate=1.0))
+        t0 = time.time()
+        res = mine_streamed(store, cfg, chunk_rows=chunk, obs=obs)
+        dt = time.time() - t0
+        times[mode].append(dt)
+        sigs[mode] = sig(res)
+        if obs is not None:
+            snap = obs.counters()
+            counters = {k: v for k, v in snap.items() if not isinstance(v, dict)}
+overhead = min(times["obs"]) / min(times["plain"])
+print(json.dumps({"plain_seconds": min(times["plain"]),
+                  "obs_seconds": min(times["obs"]), "overhead": overhead,
+                  "frequent": res.total_frequent, "plain_sig": sigs["plain"],
+                  "obs_sig": sigs["obs"], "counters": counters}))
+"""
+
+
+def _obs_run(store_dir, chunk):
+    proc = subprocess.run(
+        [sys.executable, "-c", _OBS_SCRIPT, store_dir, str(chunk)],
+        capture_output=True, text=True, timeout=1800,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "HOME": os.environ.get("HOME", "/root"),
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"obs bench failed: {proc.stderr[-2000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def bench_observability(quick=False):
+    """Observability overhead + the p99 request breakdown (DESIGN.md §13).
+
+    Overhead pair: the streamed mine at the SAME fixed shape as the
+    out-of-core / fault benches (60000 x 1024, chunk 2048), both modes
+    interleaved in one subprocess so drift hits them equally, overhead =
+    ratio of min-of-5 runtimes; the instrumented mode runs with
+    full counters AND a 100%-sampled tracer — the worst obs configuration —
+    and must hash-match the plain result (provable inertness) while staying
+    within the CI overhead gate (<= 1.05x).
+
+    Breakdown row: a 100%-sampled gateway under concurrent load; every
+    request span carries queue/batch-assembly/device wall-time attributes,
+    so "where does the p99 request actually go" is read straight off the
+    sampled spans instead of guessed from aggregate percentiles.
+    """
+    import shutil
+    import tempfile
+
+    chunk = 2_048
+    d = tempfile.mkdtemp(prefix="bench_obs_store_")
+    try:
+        _ft_run("prep", d, chunk, 0)
+        pair = _obs_run(d, chunk)
+        assert pair["obs_sig"] == pair["plain_sig"], "instrumented mine drifted"
+        overhead = pair["overhead"]
+        c = pair["counters"]
+        row("obs_mine_plain_n60000", pair["plain_seconds"] * 1e6,
+            f"frequent={pair['frequent']}")
+        row("obs_mine_instrumented_n60000", pair["obs_seconds"] * 1e6,
+            f"overhead_vs_plain={overhead:.3f}x;parity=ok;"
+            f"chunks={c.get('mine_chunks_streamed', 0)};"
+            f"rows={c.get('mine_rows_streamed', 0)};"
+            f"levels={c.get('mine_levels', 0)}")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    # ---- where does the p99 request go? (sampled-span breakdown) ---------
+    from benchmarks.load_gen import closed_loop
+    from repro.core.itemsets import pack_bits
+    from repro.obs import Tracer
+    from repro.serving import Gateway
+
+    num_rules, num_items = 4096, 256
+    rb = _synthetic_rulebook(num_rules, num_items)
+    rng = np.random.default_rng(2)
+    baskets = list(pack_bits((rng.random((512, num_items)) < 0.1).astype(np.int8)))
+    n_req = 1_500 if quick else 6_000
+    tracer = Tracer(sample_rate=1.0, capacity=2 * n_req)
+    with Gateway(rb, max_batch=64, max_wait_ms=1.0, cache_capacity=0,
+                 warmup="ladder", tracer=tracer) as gw:
+        closed_loop(gw, baskets, num_requests=n_req, concurrency=32)
+    reqs = [s for s in tracer.spans()
+            if s.name == "gateway.request" and "queue_ms" in s.attrs]
+    reqs.sort(key=lambda s: s.duration_s())
+    if not reqs:
+        row("obs_p99_breakdown", -1, "FAILED_no_sampled_requests")
+        return
+    p99 = reqs[min(len(reqs) - 1, int(0.99 * len(reqs)))]
+    total_ms = p99.duration_s() * 1e3
+    row("obs_p99_breakdown", total_ms * 1e3,
+        f"queue_ms={p99.attrs['queue_ms']:.2f};"
+        f"batch_ms={p99.attrs['batch_ms']:.3f};"
+        f"device_ms={p99.attrs['device_ms']:.2f};"
+        f"total_ms={total_ms:.2f};sampled={len(reqs)}")
+
+
 def _persist_trajectory(path, new_rows, backend, quick):
     """Merge-update a committed BENCH_*.json trajectory file.
 
@@ -680,6 +807,7 @@ def main() -> None:
     bench_rule_serving(q)
     bench_serve_gateway(q)
     bench_replicated_serve(q)
+    bench_observability(q)
 
     import jax
 
@@ -712,6 +840,15 @@ def main() -> None:
         fault_path = os.path.join(repo_root, "BENCH_fault.json")
         n_rows = _persist_trajectory(fault_path, fault_rows, backend, q)
         print(f"# merged {len(fault_rows)} fault rows into {fault_path} "
+              f"({n_rows} total)", file=sys.stderr)
+
+    # ... and the observability trajectory (instrumentation overhead + p99
+    # breakdown), the committed numbers the CI overhead gate reads (§13)
+    obs_rows = [r for r in payload["rows"] if r["name"].startswith("obs_")]
+    if obs_rows:
+        obs_path = os.path.join(repo_root, "BENCH_obs.json")
+        n_rows = _persist_trajectory(obs_path, obs_rows, backend, q)
+        print(f"# merged {len(obs_rows)} obs rows into {obs_path} "
               f"({n_rows} total)", file=sys.stderr)
 
 

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Callable
 
 import jax
@@ -229,6 +230,7 @@ def run_level_loop(
     cfg: AprioriConfig,
     checkpoint_cb: Callable | None = None,
     resume_state: dict | None = None,
+    obs=None,
 ) -> AprioriResult:
     """The driver's level loop, abstracted over HOW candidates are counted.
 
@@ -245,6 +247,11 @@ def run_level_loop(
     (``generate_candidates`` is np.unique-canonical) — which is what lets a
     resumed mine regenerate the in-progress level's candidates instead of
     persisting them.
+
+    ``obs`` (an :class:`repro.obs.MiningObs`) records per-level job counters
+    (candidates generated / frequent survivors) and the candidate-generation
+    phase time — observation only, the mined dicts are identical with obs
+    on/off.
     """
     min_count = max(1, math.ceil(cfg.min_support * n))
     levels = dict(resume_state["levels"]) if resume_state else {}
@@ -252,10 +259,16 @@ def run_level_loop(
 
     if start_k <= 1:
         # level 1: supports of singletons — the same count path (uniform Map/Reduce)
+        t_gen0 = time.perf_counter()
         singles = enc.singleton_itemsets(num_items)
+        if obs is not None:
+            obs.on_level_start(1, singles.shape[0])
+            obs.add_phase("candidate_gen", t_gen0, time.perf_counter())
         sup1 = count_fn(singles, 1)
         keep = sup1 >= min_count
         levels[1] = (singles[keep], sup1[keep])
+        if obs is not None:
+            obs.on_level_end(1, int(keep.sum()))
         if checkpoint_cb:
             checkpoint_cb(1, levels)
         start_k = 2
@@ -264,6 +277,7 @@ def run_level_loop(
         prev_sets = levels.get(k - 1, (np.zeros((0, k - 1), np.int32),))[0]
         if prev_sets.shape[0] < k:   # cannot form a k-itemset
             break
+        t_gen0 = time.perf_counter()
         if cfg.use_naive_paper_map:
             # paper §3.3: enumerate every k-subset of the (frequent) item universe
             freq_items = levels[1][0].ravel()
@@ -273,8 +287,13 @@ def run_level_loop(
             cands = cand_mod.generate_candidates(prev_sets)
         if cands.shape[0] == 0:
             break
+        if obs is not None:
+            obs.on_level_start(k, cands.shape[0])
+            obs.add_phase("candidate_gen", t_gen0, time.perf_counter())
         sup = count_fn(cands, k)
         keep = sup >= min_count
+        if obs is not None:
+            obs.on_level_end(k, int(keep.sum()))
         if not keep.any():
             break
         levels[k] = (cands[keep], sup[keep])

@@ -41,6 +41,7 @@ Fault tolerance (DESIGN.md §11):
 from __future__ import annotations
 
 import math
+import time
 from typing import TYPE_CHECKING, Callable
 
 import jax
@@ -111,6 +112,7 @@ def _count_pass_chunks(
     chunks_done: int = 0,
     save_every: int = 0,
     save_fn: Callable | None = None,
+    obs=None,
 ):
     """Fold every DB chunk into a device accumulator; sync ONCE — unless a
     mid-pass checkpoint cadence is set, in which case each save adds exactly
@@ -120,19 +122,51 @@ def _count_pass_chunks(
     skips the already-folded chunks at the store and hands the saved
     accumulator here; the save cadence stays aligned to ABSOLUTE chunk
     indices so a resumed pass checkpoints at the same points.
+
+    ``obs`` (an :class:`repro.obs.MiningObs`) attributes the pass's time:
+    ``prefetch_stall`` is the fold blocking on the chunk iterator,
+    ``count_kernel`` the (async) dispatch of the accumulate step,
+    ``host_sync`` the final device→host transfer that also drains the
+    device queue, ``checkpoint_write`` the mid-pass saves.  The obs-off
+    path is the original untouched loop.
     """
     acc = _init_acc(kp, cfg, mesh, init=init_acc)
     done = chunks_done
     it = ShardedBatchIterator(chunks, mesh, batch_spec(cfg.data_axes), prefetch=prefetch)
     try:
-        for t_chunk in it:
-            acc = accum_step(t_chunk, c_dev, len_dev, acc)
-            done += 1
-            if save_fn is not None and save_every > 0 and done % save_every == 0:
-                save_fn(np.asarray(acc), done)
+        if obs is None:
+            for t_chunk in it:
+                acc = accum_step(t_chunk, c_dev, len_dev, acc)
+                done += 1
+                if save_fn is not None and save_every > 0 and done % save_every == 0:
+                    save_fn(np.asarray(acc), done)
+        else:
+            src = iter(it)
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    t_chunk = next(src)
+                except StopIteration:
+                    break
+                t1 = time.perf_counter()
+                acc = accum_step(t_chunk, c_dev, len_dev, acc)
+                t2 = time.perf_counter()
+                obs.add_phase("prefetch_stall", t0, t1)
+                obs.add_phase("count_kernel", t1, t2)
+                obs.on_chunk(int(t_chunk.shape[0]))
+                done += 1
+                if save_fn is not None and save_every > 0 and done % save_every == 0:
+                    t3 = time.perf_counter()
+                    save_fn(np.asarray(acc), done)
+                    obs.add_phase("checkpoint_write", t3, time.perf_counter())
     finally:
         it.close()
-    return np.asarray(acc)   # the final host sync of this candidate pass
+    if obs is None:
+        return np.asarray(acc)   # the final host sync of this candidate pass
+    t0 = time.perf_counter()
+    out = np.asarray(acc)
+    obs.add_phase("host_sync", t0, time.perf_counter())
+    return out
 
 
 def count_supports_streamed(
@@ -142,6 +176,7 @@ def count_supports_streamed(
     mesh=None,
     chunk_rows: int = 8192,
     prefetch: int = 2,
+    obs=None,
 ) -> np.ndarray:
     """Exact support counts of ``cand_sets`` over an on-disk store.
 
@@ -157,7 +192,8 @@ def count_supports_streamed(
     chunk_rows = _effective_chunk_rows(chunk_rows, cfg, mesh)
     accum_step = make_accum_count_step(mesh, cfg)
     return _count_level_streamed(
-        accum_step, store, cand_sets, num_items, cfg, mesh, chunk_rows, prefetch
+        accum_step, store, cand_sets, num_items, cfg, mesh, chunk_rows, prefetch,
+        obs=obs,
     )
 
 
@@ -173,6 +209,7 @@ def _count_level_streamed(
     cursor: MiningState | None = None,
     save_cb: Callable | None = None,
     save_every: int = 0,
+    obs=None,
 ):
     """One level's candidate passes over the store.
 
@@ -200,6 +237,8 @@ def _count_level_streamed(
     for start in range(start0, k_total, cfg.max_candidates_per_pass):
         chunk_c = cand_sets[start : start + cfg.max_candidates_per_pass]
         kp = ap._pad_bucket(chunk_c.shape[0], quantum)
+        if obs is not None:
+            obs.observe_max_candidate_bucket(kp)
         c_dev, len_dev = ap._place_candidates(chunk_c, kp, num_items, cfg, mesh)
         init_acc, start_chunk = None, 0
         if resume_acc is not None:   # first pass after a mid-level resume only
@@ -227,7 +266,7 @@ def _count_level_streamed(
         out = _count_pass_chunks(
             accum_step, chunks, c_dev, len_dev, kp, cfg, mesh, prefetch,
             init_acc=init_acc, chunks_done=start_chunk,
-            save_every=save_every, save_fn=save_fn,
+            save_every=save_every, save_fn=save_fn, obs=obs,
         )
         counts[start : start + chunk_c.shape[0]] = out[: chunk_c.shape[0]]
     return counts
@@ -254,6 +293,7 @@ def mine_streamed(
     checkpoint: "MiningCheckpoint | str | bool | None" = None,
     checkpoint_every_chunks: int = 0,
     resume: bool = False,
+    obs=None,
 ) -> ap.AprioriResult:
     """Level-wise Apriori over an on-disk store, dict-equal to ``mine``.
 
@@ -287,10 +327,12 @@ def mine_streamed(
 
         def count_fn(cand_sets, level_k):
             return _count_level_streamed(
-                accum_step, store, cand_sets, num_items, cfg, mesh, chunk_rows, prefetch
+                accum_step, store, cand_sets, num_items, cfg, mesh, chunk_rows,
+                prefetch, obs=obs,
             )
 
-        return ap.run_level_loop(count_fn, n, num_items, cfg, checkpoint_cb, resume_state)
+        return ap.run_level_loop(count_fn, n, num_items, cfg, checkpoint_cb,
+                                 resume_state, obs=obs)
 
     store_fp = store_fingerprint(store)
     mine_fp = mining_fingerprint(cfg, chunk_rows)
@@ -345,9 +387,11 @@ def mine_streamed(
             cursor=cur,
             save_cb=save_cb if checkpoint_every_chunks > 0 else None,
             save_every=checkpoint_every_chunks,
+            obs=obs,
         )
 
-    result = ap.run_level_loop(count_fn, n, num_items, cfg, level_cb, resume_state)
+    result = ap.run_level_loop(count_fn, n, num_items, cfg, level_cb, resume_state,
+                               obs=obs)
     mgr.wait()   # the last boundary snapshot is committed before we return
     return result
 
@@ -359,6 +403,7 @@ def mine_son_streamed(
     chunk_rows: int = 8192,
     prefetch: int = 2,
     fault: FaultConfig | None = None,
+    obs=None,
 ) -> ap.AprioriResult:
     """SON two-phase mining over an on-disk store, dict-equal to
     ``mine_son`` (and to ``mine`` — SON is exact for any partitioning).
@@ -393,7 +438,8 @@ def mine_son_streamed(
             # re-reads shard p from disk on every (re-)execution — idempotent
             return son_mod.local_winners(store.partition_dense(p), cfg)
 
-        winners, report = run_partitions(map_shard, store.num_partitions, fault)
+        winners, report = run_partitions(map_shard, store.num_partitions, fault,
+                                         obs=obs)
         union = son_mod.merge_winners(w for w in winners if w is not None)
 
     # ---- phase 2: ONE streamed exact count of the whole union ----
@@ -410,6 +456,8 @@ def mine_son_streamed(
         for start in range(0, cands.shape[0], cfg.max_candidates_per_pass):
             chunk_c = cands[start : start + cfg.max_candidates_per_pass]
             kp = ap._pad_bucket(chunk_c.shape[0], quantum)
+            if obs is not None:
+                obs.observe_max_candidate_bucket(kp)
             c_dev, len_dev = ap._place_candidates(chunk_c, kp, num_items, cfg, mesh)
             units.append([k, start, chunk_c.shape[0], c_dev, len_dev, _init_acc(kp, cfg, mesh)])
     if units:
@@ -421,12 +469,29 @@ def mine_son_streamed(
         )
         it = ShardedBatchIterator(chunks, mesh, batch_spec(cfg.data_axes), prefetch=prefetch)
         try:
-            for t_chunk in it:
-                for u in units:
-                    u[5] = accum_step(t_chunk, u[3], u[4], u[5])
+            if obs is None:
+                for t_chunk in it:
+                    for u in units:
+                        u[5] = accum_step(t_chunk, u[3], u[4], u[5])
+            else:
+                src = iter(it)
+                while True:
+                    t0 = time.perf_counter()
+                    try:
+                        t_chunk = next(src)
+                    except StopIteration:
+                        break
+                    t1 = time.perf_counter()
+                    for u in units:
+                        u[5] = accum_step(t_chunk, u[3], u[4], u[5])
+                    t2 = time.perf_counter()
+                    obs.add_phase("prefetch_stall", t0, t1)
+                    obs.add_phase("count_kernel", t1, t2)
+                    obs.on_chunk(int(t_chunk.shape[0]))
         finally:
             it.close()
 
+    t_sync0 = time.perf_counter()
     levels = {}
     for k, cands in per_level.items():
         sup = np.zeros(cands.shape[0], dtype=np.int64)
@@ -436,6 +501,8 @@ def mine_son_streamed(
         keep = sup >= min_count
         if keep.any():
             levels[k] = (cands[keep], sup[keep])
+    if obs is not None:
+        obs.add_phase("host_sync", t_sync0, time.perf_counter())
     return ap.AprioriResult(
         levels=levels, num_transactions=n, min_count=min_count, fault_report=report
     )

@@ -80,6 +80,7 @@ class FaultReport:
     attempts: dict = dataclasses.field(default_factory=dict)  # partition -> executions
     retries: int = 0                 # failure-triggered re-executions
     speculative_issued: int = 0      # straggler backup copies launched
+    speculative_wins: int = 0        # partitions whose backup copy finished first
     skipped: tuple = ()              # partitions dropped in "skip" mode
     completed: int = 0
 
@@ -92,6 +93,7 @@ class FaultReport:
             "attempts": {int(k): int(v) for k, v in self.attempts.items()},
             "retries": self.retries,
             "speculative_issued": self.speculative_issued,
+            "speculative_wins": self.speculative_wins,
             "skipped": [int(p) for p in self.skipped],
             "completed": self.completed,
         }
@@ -118,6 +120,7 @@ def run_partitions(
     worker_fn: Callable[[int], object],
     num_partitions: int,
     fault: FaultConfig = FaultConfig(),
+    obs=None,
 ) -> tuple[list, FaultReport]:
     """Execute ``worker_fn(p)`` for every partition through the retrying,
     speculating work queue; returns ``(results, report)`` with ``results[p]``
@@ -126,6 +129,10 @@ def run_partitions(
     ``worker_fn`` must be idempotent and re-invokable (it re-reads its
     partition — the HDFS-split property); duplicate completions from
     speculative copies are discarded under a lock, first writer wins.
+
+    ``obs`` (an :class:`repro.obs.MiningObs`) mirrors the report into live
+    Hadoop-style job counters — attempts, retries, speculative issues/wins,
+    skips — purely observational: results are identical with obs on/off.
     """
     if num_partitions == 0:
         return [], FaultReport()
@@ -153,6 +160,8 @@ def run_partitions(
         return None
 
     def _run_task(t: _Task):
+        if obs is not None:
+            obs.on_partition_attempt(retry=t.attempt > 0, speculative=t.speculative)
         t0 = time.perf_counter()
         try:
             if fault.failure_injector is not None:
@@ -173,6 +182,8 @@ def run_partitions(
                     if fault.on_exhausted == "skip":
                         report.skipped = report.skipped + (t.idx,)
                         results[t.idx] = None
+                        if obs is not None:
+                            obs.on_partition_skipped()
                     elif not error:
                         error.append(PartitionFailure(t.idx, t.attempt + 1, e))
                         done_evt.set()
@@ -187,12 +198,17 @@ def run_partitions(
         dt = time.perf_counter() - t0
         with lock:
             report.attempts[t.idx] += 1
-            if results[t.idx] is _UNSET:
+            won = results[t.idx] is _UNSET
+            if won:
                 results[t.idx] = value
                 report.completed += 1
+                if t.speculative:      # the backup copy beat the original
+                    report.speculative_wins += 1
                 durations.append(dt)
                 running.pop(t.idx, None)
                 _finish_one()
+        if won and obs is not None:
+            obs.on_partition_done(speculative_win=t.speculative)
 
     def _worker():
         while not done_evt.is_set():

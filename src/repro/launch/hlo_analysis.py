@@ -2,8 +2,8 @@
 collective bytes, with while-loop bodies multiplied by their trip counts.
 
 Why this exists: XLA's ``compiled.cost_analysis()`` counts a while body ONCE —
-under scan-over-layers (and kv-block / SSD-chunk scans) that underestimates
-FLOPs by ~L×.  The compiled text however carries
+under any scanned count step (chunked candidate passes, level loops) that
+underestimates FLOPs by the trip count.  The compiled text however carries
 ``backend_config={"known_trip_count":{"n":...}}`` on every scan-derived while,
 so an exact static walk is possible:
 
@@ -202,8 +202,9 @@ def analyze(text: str) -> HloCosts:
             if op == "dot":
                 total.flops += _dot_flops(ins, symtab)
             if op == "convolution":
-                # rough: 2 * |out| * (kernel elems / out-channels) — our models
-                # lower convs to dots, so this path is effectively unused
+                # rough: 2 * |out| * sqrt(kernel elems) — the mining count
+                # steps contain no convolutions, so this path is a fallback
+                # for foreign modules only
                 out_elems, _ = _shape_elems_and_dims(ins.type_str)
                 k_elems, _ = _shape_elems_and_dims(symtab.get(ins.operands[1], "")) if len(ins.operands) > 1 else (1, [])
                 total.flops += 2.0 * out_elems * max(1, k_elems) ** 0.5

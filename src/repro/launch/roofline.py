@@ -10,12 +10,13 @@ Hardware constants (TPU v5e target):
   collective term = collective_bytes_per_device / link_bw
 
 FLOPs / HBM bytes / collective bytes come from launch.hlo_analysis (the
-while-trip-count-corrected static walk of the compiled module — the raw
-``cost_analysis()`` numbers are recorded alongside for reference; they count
-scan bodies once and so underestimate by ~L×, see EXPERIMENTS.md §Dry-run).
+while-trip-count-corrected static walk of the compiled module — XLA's raw
+``cost_analysis()`` counts a while body once and so underestimates any
+scanned count step by ~trip-count×; see the hlo_analysis module docstring).
 
 The miner's useful-FLOPs estimate (2·n·items·K/256 packed word ops) lives in
-``launch.mine_dryrun``; the ratio useful / HLO_FLOPs catches padding and
+``launch.mine_dryrun`` and in ``launch.mine --metrics-out``'s static_cost
+block (DESIGN.md §13); the ratio useful / HLO_FLOPs catches padding and
 dispatch overhead.
 """
 

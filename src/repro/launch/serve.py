@@ -90,6 +90,19 @@ def main():
                          "DeadlineExceeded, counted in the summary")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write the serving summary as JSON")
+    # observability (DESIGN.md §13)
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write sampled request spans as Chrome trace-event "
+                         "JSON (load in ui.perfetto.dev)")
+    ap.add_argument("--trace-sample", type=float, default=0.01,
+                    help="root-request sampling rate for --trace-out "
+                         "(1.0 = every request; swaps are always traced)")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write the final unified metrics-registry snapshot "
+                         "(gateway + per-replica + router) as JSON")
+    ap.add_argument("--metrics-jsonl", default="", metavar="PATH",
+                    help="append periodic registry snapshots as JSONL while "
+                         "the load runs (obs.Sampler time series)")
     args = ap.parse_args()
     if args.crash_worker_mid_load and not args.supervise:
         print("[serve] --crash-worker-mid-load implies --supervise (else the load hangs)")
@@ -153,20 +166,34 @@ def main():
     from repro.serving.batcher import DeadlineExceeded, WorkerCrashed
 
     use_router = args.replicas > 1
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+
+        tracer = Tracer(sample_rate=args.trace_sample)
     gateway_kw = dict(impl=args.impl, top_k=args.top_k, max_batch=args.max_batch,
                       max_wait_ms=args.max_wait_ms, queue_depth=args.queue_depth,
                       cache_capacity=args.cache, warmup="ladder")
     if use_router:
         srv = Router(rb, args.replicas,
                      fault=FaultConfig(max_retries=3, backoff_s=0.01),
-                     attempt_timeout_s=1.0, **gateway_kw)
+                     attempt_timeout_s=1.0, tracer=tracer, **gateway_kw)
         print(f"[serve] replicated tier: {args.replicas} replicas behind the "
               f"router (consistent basket hashing, supervised)")
     else:
-        srv = Gateway(rb, **gateway_kw)
+        srv = Gateway(rb, tracer=tracer, **gateway_kw)
 
     supervisor = None
+    sampler = None
     with srv as gw:
+        if args.metrics_jsonl:
+            from repro.obs import Sampler
+
+            # the primary registry: router counters when replicated, else the
+            # lone gateway's — one JSONL line per interval while load runs
+            sampler = Sampler(gw.metrics.registry, args.metrics_jsonl,
+                              interval_s=0.25)
+            sampler.start()
         if args.supervise and not use_router:   # the router supervises itself
             supervisor = WorkerSupervisor(gw)
         # a minimal closed-loop client, intentionally independent of
@@ -266,6 +293,28 @@ def main():
                     break
                 time.sleep(0.02)
         stats = gw.stats()
+        if sampler is not None:
+            sampler.stop()
+            print(f"[obs] sampled {sampler.samples_written} registry snapshots "
+                  f"-> {args.metrics_jsonl}", file=sys.stderr)
+        if args.metrics_out:
+            if use_router:
+                registries = {
+                    "router": gw.metrics.registry.snapshot(),
+                    "replicas": [rep.gateway.metrics.registry.snapshot()
+                                 for rep in gw.replicas],
+                }
+            else:
+                registries = {"gateway": gw.metrics.registry.snapshot()}
+            with open(args.metrics_out, "w") as f:
+                json.dump(registries, f, indent=2)
+            print(f"[obs] wrote metrics registry -> {args.metrics_out}",
+                  file=sys.stderr)
+        if tracer is not None:
+            tracer.save_chrome(args.trace_out)
+            print(f"[obs] wrote {len(tracer.spans())} spans "
+                  f"({tracer.sampled_roots} sampled roots) -> {args.trace_out} "
+                  "(load in ui.perfetto.dev)", file=sys.stderr)
 
     lat = np.asarray(sorted(latencies))
     pct = lambda q: float(np.percentile(lat, q)) * 1e3 if lat.size else 0.0

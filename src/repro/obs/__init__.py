@@ -1,0 +1,25 @@
+"""Shared observability substrate: metrics registry, span tracer, mining
+job counters (DESIGN.md §13)."""
+
+from .registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Sampler,
+)
+from .trace import Span, Tracer
+from .mining import MiningObs, MiningProgress, PHASES
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "MiningObs",
+    "MiningProgress",
+    "PHASES",
+    "Sampler",
+    "Span",
+    "Tracer",
+]

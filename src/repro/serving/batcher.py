@@ -74,6 +74,9 @@ class Request:
     t_submit: float           # perf_counter at admission (latency accounting)
     deadline: float | None = None   # absolute perf_counter time; expired
                                     # requests are dropped at dispatch
+    span: object | None = None      # sampled obs.trace.Span carrying trace
+                                    # context through the batcher (§13);
+                                    # None for the unsampled fast path
 
 
 class MicroBatcher:
@@ -195,6 +198,10 @@ class MicroBatcher:
                     stranded.append(item)
         for r in stranded:
             if not r.future.done():
+                # span first, future second: whoever awaits the future ends
+                # the PARENT span on wake, so the child must close before
+                if r.span is not None:
+                    r.span.end(outcome="worker_crashed")
                 r.future.set_exception(WorkerCrashed(reason))
                 if self._metrics is not None:
                     self._metrics.record_response(0.0, failed=True)
@@ -244,6 +251,8 @@ class MicroBatcher:
         for r in batch:
             if r.deadline is not None and now >= r.deadline:
                 if not r.future.done():
+                    if r.span is not None:   # close before waking the waiter
+                        r.span.end(outcome="deadline_expired")
                     r.future.set_exception(DeadlineExceeded(
                         f"deadline passed {(now - r.deadline) * 1e3:.1f} ms "
                         f"before dispatch (queued {(now - r.t_submit) * 1e3:.1f} ms)"
@@ -285,6 +294,8 @@ class MicroBatcher:
                 self._dispatch_fn(group)
             except BaseException as e:  # noqa: BLE001 — must reach the futures
                 for r in group:
+                    if r.span is not None:   # close before waking the waiter
+                        r.span.end(outcome="dispatch_error")
                     if not r.future.done():
                         r.future.set_exception(e)
                         if self._metrics is not None:

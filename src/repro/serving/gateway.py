@@ -101,11 +101,19 @@ class Gateway:
         block_n: int = 256,
         block_k: int = 256,
         warmup: bool | str = True,
+        tracer=None,
+        trace_root: bool = True,
     ):
         """``warmup``: ``True`` compiles the bucket-ladder endpoints
         (1 and ``max_batch``) per generation before it serves; ``"ladder"``
         compiles every power-of-two bucket (no mid-load jit spikes at all);
-        ``False`` compiles lazily on first use."""
+        ``False`` compiles lazily on first use.
+
+        ``tracer``: optional :class:`repro.obs.Tracer`; sampled requests get
+        cache-probe / queue-wait / batch-assembly / device-dispatch spans.
+        ``trace_root=False`` (the router's replicas) makes the gateway only
+        ever CONTINUE a trace handed in by its caller, never start one —
+        sampling then happens once, at the router."""
         self.num_items = rulebook.num_items
         self.default_top_k = min(top_k, self.num_items)
         self.exclude_basket = exclude_basket
@@ -114,6 +122,8 @@ class Gateway:
         self._mesh = mesh
         self._rule_axis = rule_axis
         self._warmup_enabled = warmup
+        self._tracer = tracer
+        self._trace_root = bool(trace_root)
         self._closed = False
 
         if mesh is None:
@@ -156,7 +166,8 @@ class Gateway:
         self.close()
 
     # ----------------------------------------------------------- requests --
-    def submit(self, basket, top_k: int | None = None, deadline_ms: float | None = None):
+    def submit(self, basket, top_k: int | None = None, deadline_ms: float | None = None,
+               _span_parent=None):
         """Admit one basket query; returns a Future[:class:`Response`].
 
         ``basket``: item-id list/tuple/1-D int array, or a pre-packed (W,)
@@ -167,6 +178,9 @@ class Gateway:
         dropped at dispatch time with
         :class:`~repro.serving.batcher.DeadlineExceeded` instead of
         spending device time on abandoned work.
+
+        ``_span_parent``: internal — a router attempt span this request
+        should continue (the cross-layer trace-context propagation, §13).
         """
         if self._closed:
             self.metrics.record_admission(False)
@@ -175,8 +189,21 @@ class Gateway:
         packed = self._pack_one(basket)
         t0 = time.perf_counter()
 
+        span = None
+        if self._tracer is not None:
+            if _span_parent is not None:
+                span = self._tracer.child(_span_parent, "gateway.request", top_k=k)
+            elif self._trace_root:
+                span = self._tracer.root("gateway.request", top_k=k)
+            if span is not None:
+                span.t0 = t0   # backdate to submit entry so cache.probe
+                               # and queue.wait nest inside this span
+
         gen = self._generation
         hit = self.cache.get(basket_key(packed, k, gen.generation), count=False)
+        if span is not None:
+            self._tracer.add_span(span, "cache.probe", t0, time.perf_counter(),
+                                  hit=hit is not None)
         if hit is not None:
             items, scores, answered_by, bucket = hit
             latency = time.perf_counter() - t0
@@ -186,12 +213,19 @@ class Gateway:
             self.metrics.record_response(latency)
             fut = Future()
             fut.set_result(Response(items, scores, answered_by, True, latency, bucket))
+            if span is not None:
+                span.end(outcome="cache_hit", generation=answered_by)
             return fut
 
         deadline = None if deadline_ms is None else t0 + max(0.0, float(deadline_ms)) / 1e3
         req = Request(packed=packed, top_k=k, future=Future(), t_submit=t0,
-                      deadline=deadline)
-        self._batcher.submit(req)   # raises AdmissionRejected on overload
+                      deadline=deadline, span=span)
+        try:
+            self._batcher.submit(req)   # raises AdmissionRejected on overload
+        except AdmissionRejected:
+            if span is not None:
+                span.end(outcome="rejected")
+            raise
         # hit/miss is counted only for admitted requests, and on BOTH the
         # cache's and the gateway metrics' counters — the two published
         # hit-rates agree, and cache_hits + cache_misses == submitted
@@ -222,18 +256,31 @@ class Gateway:
                 f"serves {self.num_items} — vocabulary must be stable across swaps"
             )
         gen_id = self._generation.generation + 1 if generation is None else int(generation)
-        gen = self._place(gen_id, rulebook)
-        if self._warmup_enabled:
-            self._warm(gen)              # double-buffer: compile before commit
+        sp = None
+        if self._tracer is not None and self._trace_root:
+            sp = self._tracer.root("swap.prepare", force=True, generation=gen_id)
+        try:
+            gen = self._place(gen_id, rulebook)
+            if self._warmup_enabled:
+                self._warm(gen)          # double-buffer: compile before commit
+        finally:
+            if sp is not None:
+                sp.end()
         return gen
 
     def commit_swap(self, prepared: "_Generation") -> int:
         """Phase 2: flip the serving reference to a prepared generation —
         one atomic store, same zero-drop/zero-mix contract as
         :meth:`hot_swap`."""
+        sp = None
+        if self._tracer is not None and self._trace_root:
+            sp = self._tracer.root("swap.commit", force=True,
+                                   generation=prepared.generation)
         with self._swap_lock:
             self._generation = prepared  # the atomic store
             self.metrics.record_swap()
+            if sp is not None:
+                sp.end()
             return prepared.generation
 
     def hot_swap(self, rulebook: Rulebook) -> int:
@@ -318,11 +365,23 @@ class Gateway:
         generations within a batch."""
         gen = self._generation
         k = group[0].top_k
+        t_drain = time.perf_counter()
         bucket = pow2_bucket(len(group), self.max_batch, self._row_multiple)
         b = np.zeros((bucket, self._words), np.uint32)
         for i, r in enumerate(group):
             b[i] = r.packed
+        t_asm = time.perf_counter()
         idx, vals = self._match(b, gen, k)
+        t_dev = time.perf_counter()
+        tr = self._tracer
+        if tr is not None:
+            for r in group:
+                if r.span is not None:
+                    tr.add_span(r.span, "queue.wait", r.t_submit, t_drain)
+                    tr.add_span(r.span, "batch.assemble", t_drain, t_asm,
+                                batch=len(group), bucket=bucket)
+                    tr.add_span(r.span, "device.dispatch", t_asm, t_dev,
+                                bucket=bucket)
         self.metrics.record_batch(len(group), bucket)
         now = time.perf_counter()
         for i, r in enumerate(group):
@@ -333,4 +392,11 @@ class Gateway:
             )
             latency = now - r.t_submit
             self.metrics.record_response(latency)
+            if r.span is not None:
+                # the per-request "where did the time go" breakdown the p99
+                # bench row reads straight off the root span (§13)
+                r.span.end(outcome="ok", generation=gen.generation, bucket=bucket,
+                           queue_ms=(t_drain - r.t_submit) * 1e3,
+                           batch_ms=(t_asm - t_drain) * 1e3,
+                           device_ms=(t_dev - t_asm) * 1e3)
             r.future.set_result(Response(items, scores, gen.generation, False, latency, bucket))

@@ -1,271 +1,224 @@
 """Serving-side observability: latency histograms + gateway counters (§10).
 
-The gateway records every request into a :class:`GatewayMetrics` — admission
-(submitted / rejected), cache hits vs misses, per-dispatch batch occupancy
-(real rows vs the padded jit bucket), rulebook swaps, and end-to-end request
-latency into a :class:`LatencyHistogram`. ``snapshot()`` returns one plain
-dict (JSON-able) with p50/p95/p99 so the load harness, the serve CLI and CI
-gates all read the same numbers.
+Backed by the shared :mod:`repro.obs` substrate since §13: every counter
+and the latency histogram live in one :class:`~repro.obs.MetricsRegistry`
+whose re-entrant lock makes ``snapshot()`` **atomic across the whole metric
+set** — a concurrent writer can never produce a torn snapshot where
+``batch_rows_real`` comes from before a dispatch and ``batch_rows_padded``
+from after it, and the derived ``batch_occupancy`` / ``cache_hit_rate`` are
+computed from the same consistent cut.  The snapshot JSON shape is
+unchanged; counters still read as plain attributes (``metrics.submitted``).
 
-The histogram is log-bucketed (geometric ``GROWTH``-spaced edges from 1 µs):
-recording is O(1) and lock-cheap, quantiles are resolved to a bucket's upper
-edge — a conservative ≤ ``GROWTH``-factor overestimate, never an
-underestimate, which is the right bias for latency SLO gates.
+:class:`LatencyHistogram` is the registry histogram (log-bucketed,
+conservative bucket-upper-edge quantiles — see ``obs/registry.py``), which
+also gives it **merge**: the router aggregates replica latency histograms
+by bucket-wise addition instead of re-measuring.
 """
 
 from __future__ import annotations
 
-import math
-import threading
+from typing import Optional
 
-_FLOOR_S = 1e-6    # first bucket edge: 1 us
-_GROWTH = 1.25
-_NUM_BUCKETS = 96  # 1us * 1.25**95 ~= 1.6e3 s: covers any sane request
-_LOG_GROWTH = math.log(_GROWTH)
+from repro.obs.registry import (
+    FLOOR_S as _FLOOR_S,       # re-exported for back-compat
+    GROWTH as _GROWTH,
+    NUM_BUCKETS as _NUM_BUCKETS,
+    Histogram,
+    MetricsRegistry,
+)
 
 
-class LatencyHistogram:
+class LatencyHistogram(Histogram):
     """Log-bucketed latency histogram with exact count/sum/min/max."""
 
-    def __init__(self):
-        self._lock = threading.Lock()
-        self._counts = [0] * _NUM_BUCKETS
-        self.count = 0
-        self.sum = 0.0
-        self.min = math.inf
-        self.max = 0.0
-
-    @staticmethod
-    def _bucket(seconds: float) -> int:
-        if seconds <= _FLOOR_S:
-            return 0
-        return min(_NUM_BUCKETS - 1, 1 + int(math.log(seconds / _FLOOR_S) / _LOG_GROWTH))
-
-    @staticmethod
-    def _edge(bucket: int) -> float:
-        """Upper edge of ``bucket`` in seconds: bucket b holds samples in
-        ``[FLOOR·GROWTH^(b-1), FLOOR·GROWTH^b)`` (bucket 0: everything ≤ FLOOR)."""
-        return _FLOOR_S * _GROWTH**bucket
-
-    def record(self, seconds: float) -> None:
-        seconds = max(0.0, float(seconds))
-        with self._lock:
-            self._counts[self._bucket(seconds)] += 1
-            self.count += 1
-            self.sum += seconds
-            self.min = min(self.min, seconds)
-            self.max = max(self.max, seconds)
-
-    def quantile(self, q: float) -> float:
-        """Latency (seconds) at quantile ``q`` in (0, 1]: the upper edge of
-        the bucket holding the ceil(q·count)-th sample; 0.0 when empty."""
-        with self._lock:
-            if self.count == 0:
-                return 0.0
-            target = max(1, math.ceil(q * self.count))
-            cum = 0
-            for b, c in enumerate(self._counts):
-                cum += c
-                if cum >= target:
-                    return min(self._edge(b), self.max)
-            return self.max
-
-    def snapshot(self) -> dict:
-        return {
-            "count": self.count,
-            "mean_ms": (self.sum / self.count * 1e3) if self.count else 0.0,
-            "min_ms": (self.min * 1e3) if self.count else 0.0,
-            "max_ms": self.max * 1e3,
-            "p50_ms": self.quantile(0.50) * 1e3,
-            "p95_ms": self.quantile(0.95) * 1e3,
-            "p99_ms": self.quantile(0.99) * 1e3,
-        }
+    def __init__(self, name: str = "latency_seconds", labels=None, lock=None):
+        super().__init__(name, labels, lock=lock)
 
 
-class GatewayMetrics:
+class _RegistryMetrics:
+    """Base for counter bundles: registry-backed counters readable as plain
+    attributes, with one lock covering every metric for atomic snapshots."""
+
+    _COUNTER_FIELDS: tuple = ()
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None, *, prefix: str):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._lock = self.registry.lock
+        self._counters = {f: self.registry.counter(f"{prefix}_{f}")
+                          for f in self._COUNTER_FIELDS}
+        self.latency = self.registry.register(
+            LatencyHistogram(f"{prefix}_latency_seconds", lock=self.registry.lock))
+
+    def __getattr__(self, name):
+        counters = self.__dict__.get("_counters")
+        if counters is not None and name in counters:
+            return counters[name].value
+        raise AttributeError(f"{type(self).__name__!s} has no attribute {name!r}")
+
+    def _inc(self, field: str, n: int = 1) -> None:
+        self._counters[field].inc(n)
+
+
+class GatewayMetrics(_RegistryMetrics):
     """All gateway counters + the request-latency histogram, one lock."""
 
-    def __init__(self):
-        self._lock = threading.Lock()
-        self.latency = LatencyHistogram()
-        self.submitted = 0       # admitted into the queue (or served from cache)
-        self.rejected = 0        # refused at admission (queue full / closed)
-        self.completed = 0       # responses delivered (cache hits included)
-        self.failed = 0          # futures resolved with an exception
-        self.cache_hits = 0
-        self.cache_misses = 0
-        self.swaps = 0
-        self.deadline_expired = 0  # requests dropped past-deadline at dispatch
-        self.worker_restarts = 0  # dead dispatch workers re-armed (§11)
-        self.batches = 0         # dispatches through the match step
-        self.batch_rows_real = 0     # requests actually in dispatched batches
-        self.batch_rows_padded = 0   # rows of the padded jit buckets
+    _COUNTER_FIELDS = (
+        "submitted",          # admitted into the queue (or served from cache)
+        "rejected",           # refused at admission (queue full / closed)
+        "completed",          # responses delivered (cache hits included)
+        "failed",             # futures resolved with an exception
+        "cache_hits",
+        "cache_misses",
+        "swaps",
+        "deadline_expired",   # requests dropped past-deadline at dispatch
+        "worker_restarts",    # dead dispatch workers re-armed (§11)
+        "batches",            # dispatches through the match step
+        "batch_rows_real",    # requests actually in dispatched batches
+        "batch_rows_padded",  # rows of the padded jit buckets
+    )
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        super().__init__(registry, prefix="gateway")
 
     def record_admission(self, accepted: bool) -> None:
-        with self._lock:
-            if accepted:
-                self.submitted += 1
-            else:
-                self.rejected += 1
+        self._inc("submitted" if accepted else "rejected")
 
     def record_cache(self, hit: bool) -> None:
-        with self._lock:
-            if hit:
-                self.cache_hits += 1
-            else:
-                self.cache_misses += 1
+        self._inc("cache_hits" if hit else "cache_misses")
 
     def record_batch(self, real_rows: int, padded_rows: int) -> None:
         with self._lock:
-            self.batches += 1
-            self.batch_rows_real += real_rows
-            self.batch_rows_padded += padded_rows
+            self._inc("batches")
+            self._inc("batch_rows_real", real_rows)
+            self._inc("batch_rows_padded", padded_rows)
 
     def record_response(self, latency_s: float, failed: bool = False) -> None:
-        with self._lock:
-            if failed:
-                self.failed += 1
-            else:
-                self.completed += 1
-        if not failed:
+        if failed:
+            self._inc("failed")
+        else:
+            self._inc("completed")
             self.latency.record(latency_s)
 
     def record_swap(self) -> None:
-        with self._lock:
-            self.swaps += 1
+        self._inc("swaps")
 
     def record_deadline_expired(self) -> None:
-        with self._lock:
-            self.deadline_expired += 1
+        self._inc("deadline_expired")
 
     def record_worker_restart(self) -> None:
-        with self._lock:
-            self.worker_restarts += 1
+        self._inc("worker_restarts")
 
     @property
     def batch_occupancy(self) -> float:
-        """Real rows / padded bucket rows over all dispatches (1.0 = full)."""
-        return self.batch_rows_real / self.batch_rows_padded if self.batch_rows_padded else 0.0
+        """Real rows / padded bucket rows over all dispatches (1.0 = full).
+        Both counters are read in one lock hold — never torn mid-dispatch."""
+        with self._lock:
+            real = self._counters["batch_rows_real"].value
+            padded = self._counters["batch_rows_padded"].value
+        return real / padded if padded else 0.0
 
     @property
     def cache_hit_rate(self) -> float:
-        total = self.cache_hits + self.cache_misses
-        return self.cache_hits / total if total else 0.0
+        with self._lock:
+            hits = self._counters["cache_hits"].value
+            misses = self._counters["cache_misses"].value
+        total = hits + misses
+        return hits / total if total else 0.0
 
     def snapshot(self) -> dict:
+        # One lock hold covers counters, derived ratios AND the latency
+        # histogram (they share the registry lock): a fully atomic cut.
         with self._lock:
-            out = {
-                "submitted": self.submitted,
-                "rejected": self.rejected,
-                "completed": self.completed,
-                "failed": self.failed,
-                "cache_hits": self.cache_hits,
-                "cache_misses": self.cache_misses,
-                "swaps": self.swaps,
-                "deadline_expired": self.deadline_expired,
-                "worker_restarts": self.worker_restarts,
-                "batches": self.batches,
-                "batch_rows_real": self.batch_rows_real,
-                "batch_rows_padded": self.batch_rows_padded,
-            }
-        out["batch_occupancy"] = self.batch_occupancy
-        out["cache_hit_rate"] = self.cache_hit_rate
-        out["latency"] = self.latency.snapshot()
+            out = {f: self._counters[f].value for f in self._COUNTER_FIELDS}
+            out["batch_occupancy"] = (
+                out["batch_rows_real"] / out["batch_rows_padded"]
+                if out["batch_rows_padded"] else 0.0)
+            total = out["cache_hits"] + out["cache_misses"]
+            out["cache_hit_rate"] = out["cache_hits"] / total if total else 0.0
+            out["latency"] = self.latency.snapshot()
         return out
 
 
-class RouterMetrics:
+class RouterMetrics(_RegistryMetrics):
     """Replica-router counters + the router-level latency histogram (§12).
 
     Router latency is submit → terminal outcome INCLUDING failover retries
     and backoff, so it is an end-to-end client view; a replica gateway's own
     histogram sees only the attempts that reached it."""
 
-    def __init__(self):
-        self._lock = threading.Lock()
-        self.latency = LatencyHistogram()
-        self.routed = 0            # requests accepted by the router
-        self.completed = 0         # outer futures resolved with a Response
-        self.failed = 0            # outer futures resolved with an exception
-        self.shed = 0              # refused: every candidate replica dead/saturated
-        self.failovers = 0         # re-submissions to another replica
-        self.attempt_timeouts = 0  # attempts abandoned as unresponsive
-        self.deadline_failed = 0   # outer futures failed with DeadlineExceeded
-        self.retries_exhausted = 0 # outer futures failed after the retry budget
-        self.resyncs = 0           # lagging replicas re-synced to the target gen
-        self.swap_prepare_failures = 0  # replicas that failed two-phase prepare
-        self.coordinated_swaps = 0      # successful two-phase hot-swaps
-        self.replica_deaths = 0         # replicas declared dead (restart storm)
-        self.max_generation_lag = 0     # peak (target - replica) generation gap
-        self.current_generation_lag = 0
+    _COUNTER_FIELDS = (
+        "routed",             # requests accepted by the router
+        "completed",          # outer futures resolved with a Response
+        "failed",             # outer futures resolved with an exception
+        "shed",               # refused: every candidate replica dead/saturated
+        "failovers",          # re-submissions to another replica
+        "attempt_timeouts",   # attempts abandoned as unresponsive
+        "deadline_failed",    # outer futures failed with DeadlineExceeded
+        "retries_exhausted",  # outer futures failed after the retry budget
+        "resyncs",            # lagging replicas re-synced to the target gen
+        "swap_prepare_failures",  # replicas that failed two-phase prepare
+        "coordinated_swaps",      # successful two-phase hot-swaps
+        "replica_deaths",         # replicas declared dead (restart storm)
+    )
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        super().__init__(registry, prefix="router")
+        self._max_lag = self.registry.gauge("router_max_generation_lag")
+        self._cur_lag = self.registry.gauge("router_current_generation_lag")
 
     def record_routed(self) -> None:
-        with self._lock:
-            self.routed += 1
+        self._inc("routed")
 
     def record_completed(self, latency_s: float) -> None:
-        with self._lock:
-            self.completed += 1
+        self._inc("completed")
         self.latency.record(latency_s)
 
     def record_failed(self, *, deadline: bool = False, exhausted: bool = False) -> None:
         with self._lock:
-            self.failed += 1
+            self._inc("failed")
             if deadline:
-                self.deadline_failed += 1
+                self._inc("deadline_failed")
             if exhausted:
-                self.retries_exhausted += 1
+                self._inc("retries_exhausted")
 
     def record_shed(self) -> None:
-        with self._lock:
-            self.shed += 1
+        self._inc("shed")
 
     def record_failover(self) -> None:
-        with self._lock:
-            self.failovers += 1
+        self._inc("failovers")
 
     def record_attempt_timeout(self) -> None:
-        with self._lock:
-            self.attempt_timeouts += 1
+        self._inc("attempt_timeouts")
 
     def record_resync(self) -> None:
-        with self._lock:
-            self.resyncs += 1
+        self._inc("resyncs")
 
     def record_swap_prepare_failure(self) -> None:
-        with self._lock:
-            self.swap_prepare_failures += 1
+        self._inc("swap_prepare_failures")
 
     def record_coordinated_swap(self) -> None:
-        with self._lock:
-            self.coordinated_swaps += 1
+        self._inc("coordinated_swaps")
 
     def record_replica_death(self) -> None:
-        with self._lock:
-            self.replica_deaths += 1
+        self._inc("replica_deaths")
 
     def observe_generation_lag(self, lag: int) -> None:
         with self._lock:
-            self.current_generation_lag = lag
-            self.max_generation_lag = max(self.max_generation_lag, lag)
+            self._cur_lag.set(lag)
+            self._max_lag.max(lag)
+
+    @property
+    def max_generation_lag(self) -> int:
+        return int(self._max_lag.value)
+
+    @property
+    def current_generation_lag(self) -> int:
+        return int(self._cur_lag.value)
 
     def snapshot(self) -> dict:
         with self._lock:
-            out = {
-                "routed": self.routed,
-                "completed": self.completed,
-                "failed": self.failed,
-                "shed": self.shed,
-                "failovers": self.failovers,
-                "attempt_timeouts": self.attempt_timeouts,
-                "deadline_failed": self.deadline_failed,
-                "retries_exhausted": self.retries_exhausted,
-                "resyncs": self.resyncs,
-                "swap_prepare_failures": self.swap_prepare_failures,
-                "coordinated_swaps": self.coordinated_swaps,
-                "replica_deaths": self.replica_deaths,
-                "max_generation_lag": self.max_generation_lag,
-                "current_generation_lag": self.current_generation_lag,
-            }
-        out["latency"] = self.latency.snapshot()
+            out = {f: self._counters[f].value for f in self._COUNTER_FIELDS}
+            out["max_generation_lag"] = int(self._max_lag.value)
+            out["current_generation_lag"] = int(self._cur_lag.value)
+            out["latency"] = self.latency.snapshot()
         return out

@@ -57,6 +57,7 @@ from concurrent.futures import Future
 
 from repro.distributed.fault_tolerance import FaultConfig, InjectedFailure, retry_delay
 from repro.distributed.supervisor import ReplicaSetSupervisor
+from repro.obs.registry import Histogram
 from repro.serving.batcher import AdmissionRejected, DeadlineExceeded, WorkerCrashed
 from repro.serving.gateway import Gateway
 from repro.serving.metrics import RouterMetrics
@@ -221,7 +222,8 @@ class _RouterTask:
     """One routed request across all its attempts."""
 
     __slots__ = ("outer", "packed", "top_k", "deadline", "t_submit",
-                 "attempts", "cursor", "pref", "lock")
+                 "attempts", "cursor", "pref", "lock",
+                 "span", "att_span", "t_parked")
 
     def __init__(self, outer, packed, top_k, deadline, t_submit, pref):
         self.outer = outer
@@ -233,6 +235,9 @@ class _RouterTask:
         self.cursor = 0          # rotation into the ring preference list
         self.pref = pref
         self.lock = threading.Lock()   # guards the outer future's resolution
+        self.span = None         # sampled root span for the whole request (§13)
+        self.att_span = None     # span of the single in-flight attempt
+        self.t_parked = 0.0      # when the task was parked for retry backoff
 
 
 class Router:
@@ -261,11 +266,13 @@ class Router:
         monitor_interval_s: float = 0.02,
         max_restarts: int = 5,
         restart_window_s: float = 10.0,
+        tracer=None,
         **gateway_kwargs,
     ):
         if num_replicas < 1:
             raise ValueError("num_replicas must be >= 1")
         self.fault = fault
+        self._tracer = tracer
         self._attempt_timeout = float(attempt_timeout_s)
         self._suspect_after = int(suspect_after)
         self._healthy_after = float(healthy_after_s)
@@ -278,8 +285,12 @@ class Router:
         # N fully independent gateways: own batcher, own cache, own device
         # placement. The jit cache is shared underneath (same shapes, same
         # cached match step), so replica warmup compiles mostly once.
+        # replicas share the router's tracer but never START a trace
+        # themselves (trace_root=False): one request = one trace, sampled
+        # once at the router, continued through whichever replicas serve it
         self._replicas = [
-            Replica(rid, Gateway(rulebook, **gateway_kwargs))
+            Replica(rid, Gateway(rulebook, tracer=tracer, trace_root=False,
+                                 **gateway_kwargs))
             for rid in range(num_replicas)
         ]
         for rep in self._replicas:
@@ -337,8 +348,18 @@ class Router:
         deadline = None if deadline_ms is None else t0 + max(0.0, float(deadline_ms)) / 1e3
         task = _RouterTask(Future(), packed, k, deadline, t0,
                            self._ring.preference(packed.tobytes()))
+        if self._tracer is not None:
+            task.span = self._tracer.root("router.request", top_k=k)
+            if task.span is not None:
+                task.span.t0 = t0   # backdate to submit entry: admit nests
+                # admission: pack + ring lookup, before the first attempt
+                self._tracer.add_span(task.span, "router.admit", t0,
+                                      time.perf_counter(),
+                                      owner=task.pref[0])
         if not self._try_dispatch(task):
             self.metrics.record_shed()
+            if task.span is not None:
+                task.span.end(outcome="shed")
             raise AdmissionRejected("all replicas dead or saturated")
         self.metrics.record_routed()
         return task.outer
@@ -360,34 +381,58 @@ class Router:
         Raises if NO replica completed prepare (nothing was committed)."""
         with self._swap_lock:
             target = self._target_generation + 1
+            swap_sp = None
+            if self._tracer is not None:
+                swap_sp = self._tracer.root("router.swap", force=True,
+                                            generation=target)
             prepared: dict[int, object] = {}
             for rep in self._replicas:
                 gw = rep.gateway
                 if rep.state == DEAD or gw._batcher.closed or not gw._batcher.worker_alive:
                     continue          # revived replicas re-sync via the monitor
+                prep_sp = None if swap_sp is None else swap_sp.child(
+                    "swap.prepare", replica=rep.rid)
                 try:
                     if self.fault_injection._should_fail_swap(rep.rid):
                         raise InjectedFailure(
                             f"injected swap-prepare failure on replica {rep.rid}"
                         )
                     prepared[rep.rid] = gw.prepare_swap(rulebook, generation=target)
+                    if prep_sp is not None:
+                        prep_sp.end(outcome="ok")
                 except Exception:
                     # prepare is side-effect-free for serving: the replica
                     # keeps answering its current generation
+                    if prep_sp is not None:
+                        prep_sp.end(outcome="failed")
                     self.metrics.record_swap_prepare_failure()
                     if rep.state == HEALTHY:
                         rep.state = SUSPECT
             if not prepared:
+                if swap_sp is not None:
+                    swap_sp.end(outcome="no_replica_prepared")
                 raise RuntimeError(
                     "coordinated hot-swap failed: no replica completed prepare"
                 )
             for rid, gen in prepared.items():
+                commit_sp = None if swap_sp is None else swap_sp.child(
+                    "swap.commit", replica=rid)
                 self._replicas[rid].gateway.commit_swap(gen)
+                if commit_sp is not None:
+                    commit_sp.end()
             self._target_generation = target
             self._target_rulebook = rulebook
             self.metrics.record_coordinated_swap()
+            if swap_sp is not None:
+                swap_sp.end(outcome="ok", prepared=len(prepared))
         self._observe_lag()
         return target
+
+    @property
+    def replicas(self) -> list:
+        """The live :class:`Replica` wrappers — read-only, for observability
+        surfaces that want each replica's gateway metrics registry."""
+        return list(self._replicas)
 
     @property
     def generation(self) -> int:
@@ -398,6 +443,12 @@ class Router:
     # -------------------------------------------------------------- stats --
     def stats(self) -> dict:
         out = self.metrics.snapshot()
+        # the replica-side latency view: the N gateway histograms MERGED
+        # (bucket-wise addition ≡ recording the union of their samples, §13)
+        # instead of re-measured — attempt latency across the whole set
+        out["replica_latency"] = Histogram.merged(
+            [rep.gateway.metrics.latency for rep in self._replicas]
+        ).snapshot()
         out["target_generation"] = self._target_generation
         out["num_replicas"] = len(self._replicas)
         out["replicas"] = [
@@ -475,10 +526,18 @@ class Router:
         )
         for rid in self._candidates(task):
             gw = self._replicas[rid].gateway
+            att = None
+            if task.span is not None:
+                att = self._tracer.child(task.span, "router.attempt",
+                                         replica=rid, attempt=task.attempts + 1)
             try:
-                inner = gw.submit(task.packed, task.top_k, deadline_ms=remaining_ms)
+                inner = gw.submit(task.packed, task.top_k, deadline_ms=remaining_ms,
+                                  _span_parent=att)
             except AdmissionRejected:
+                if att is not None:
+                    att.end(outcome="rejected")
                 continue            # saturated/closed: spill to the next candidate
+            task.att_span = att
             task.attempts += 1
             task.cursor += 1
             token = next(self._token)
@@ -500,6 +559,9 @@ class Router:
             return    # watchdog already abandoned this attempt; late answer moot
         rep = self._replicas[rid]
         exc = fut.exception()
+        if task.att_span is not None:
+            task.att_span.end(
+                outcome="ok" if exc is None else type(exc).__name__)
         if exc is None:
             rep.note_success()
             resp = fut.result()
@@ -528,6 +590,7 @@ class Router:
             self._finish(task, exc=exc, exhausted=not self._closed)
             return
         self.metrics.record_failover()
+        task.t_parked = now
         delay = retry_delay(self.fault, max(0, task.attempts - 1))
         with self._lock:
             heapq.heappush(self._heap, (now + delay, next(self._seq), task))
@@ -545,6 +608,14 @@ class Router:
             self.metrics.record_completed(result.latency_s)
         else:
             self.metrics.record_failed(deadline=deadline, exhausted=exhausted)
+        if task.att_span is not None:
+            task.att_span.end()       # idempotent: usually already closed
+        if task.span is not None:
+            task.span.end(
+                outcome="ok" if exc is None else type(exc).__name__,
+                attempts=task.attempts,
+                latency_ms=(time.perf_counter() - task.t_submit) * 1e3,
+            )
         return True
 
     # -------------------------------------------------- driver + watchdog --
@@ -563,6 +634,13 @@ class Router:
             for task in due:
                 if task.outer.done():
                     continue
+                if task.span is not None and task.t_parked:
+                    # the failover gap: parked after a failed attempt until
+                    # redispatched to the next candidate
+                    self._tracer.add_span(task.span, "router.failover",
+                                          task.t_parked, now,
+                                          next_attempt=task.attempts + 1)
+                    task.t_parked = 0.0
                 if not self._try_dispatch(task):
                     task.attempts += 1    # a burnt retry, not a free spin
                     self._retry_or_fail(
@@ -571,6 +649,8 @@ class Router:
             for task, rid, _ in timed_out:
                 if task.outer.done():
                     continue
+                if task.att_span is not None:
+                    task.att_span.end(outcome="timeout")
                 self.metrics.record_attempt_timeout()
                 self._replicas[rid].note_failure(self._suspect_after)
                 self._retry_or_fail(task, WorkerCrashed(

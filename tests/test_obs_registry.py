@@ -1,0 +1,149 @@
+"""Unified metrics registry (obs.registry): histogram merge ≡ union,
+atomic snapshots under concurrent writers, prometheus exposition, and the
+Sampler's JSONL time series (DESIGN.md §13)."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs.registry import Counter, Gauge, Histogram, MetricsRegistry, Sampler
+
+
+# ---------------------------------------------------------------- histogram --
+
+def test_histogram_merge_equals_recording_the_union():
+    """Property: merging per-replica histograms is indistinguishable from one
+    histogram that recorded every sample — same count/sum/min/max and same
+    quantiles (bucket resolution is identical, so equality is EXACT)."""
+    rng = np.random.default_rng(42)
+    for trial in range(5):
+        parts = [Histogram() for _ in range(4)]
+        union = Histogram()
+        for h in parts:
+            for v in rng.lognormal(mean=-6.0, sigma=2.0, size=rng.integers(1, 200)):
+                h.record(float(v))
+                union.record(float(v))
+        merged = Histogram.merged(parts)
+        assert merged.count == union.count
+        assert merged.sum == pytest.approx(union.sum)
+        assert merged.min == union.min
+        assert merged.max == union.max
+        for q in (0.0, 0.5, 0.9, 0.95, 0.99, 1.0):
+            assert merged.quantile(q) == union.quantile(q), (trial, q)
+        assert merged.snapshot() == pytest.approx(union.snapshot())
+
+
+def test_histogram_quantile_conservative():
+    """Quantiles come from bucket upper edges: never below the true value,
+    and clamped to the observed max."""
+    h = Histogram()
+    samples = [0.001, 0.002, 0.004, 0.010, 0.100]
+    for s in samples:
+        h.record(s)
+    assert h.quantile(1.0) == pytest.approx(0.100)
+    assert h.quantile(0.5) >= 0.004 * (1 - 1e-9)
+    assert h.quantile(0.0) >= 0.001 * (1 - 1e-9)
+
+
+def test_histogram_merge_from_empty_and_into_empty():
+    a, b = Histogram(), Histogram()
+    a.record(0.01)
+    b.merge_from(a)                      # into empty
+    assert b.count == 1 and b.min == a.min and b.max == a.max
+    b.merge_from(Histogram())            # from empty: no-op
+    assert b.count == 1
+
+
+# ----------------------------------------------------------------- registry --
+
+def test_registry_get_or_create_and_labels():
+    reg = MetricsRegistry()
+    c1 = reg.counter("jobs", labels={"level": "1"})
+    c2 = reg.counter("jobs", labels={"level": "1"})
+    c3 = reg.counter("jobs", labels={"level": "2"})
+    assert c1 is c2 and c1 is not c3
+    c1.inc(3)
+    snap = reg.snapshot()
+    assert snap['jobs{level="1"}'] == 3
+    assert snap['jobs{level="2"}'] == 0
+
+
+def test_registry_snapshot_is_atomic_under_concurrent_writers():
+    """Writers keep two counters in lockstep (+2 real / +4 padded per batch);
+    every registry snapshot must observe them at an exact 0.5 ratio — a torn
+    read would show a ratio off by one update."""
+    reg = MetricsRegistry()
+    real = reg.counter("rows_real")
+    padded = reg.counter("rows_padded")
+    stop = threading.Event()
+
+    def writer():
+        while not stop.is_set():
+            with reg.lock:
+                real.inc(2)
+                padded.inc(4)
+
+    threads = [threading.Thread(target=writer, daemon=True) for _ in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(300):
+            snap = reg.snapshot()
+            r, p = snap["rows_real"], snap["rows_padded"]
+            assert r * 2 == p, f"torn snapshot: real={r} padded={p}"
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=5)
+
+
+def test_prometheus_exposition_shape():
+    reg = MetricsRegistry()
+    reg.counter("requests", labels={"route": "mine"}).inc(7)
+    reg.gauge("depth").set(3)
+    reg.histogram("latency_seconds").record(0.004)
+    text = reg.to_prometheus()
+    assert '# TYPE requests counter' in text
+    assert 'requests{route="mine"} 7' in text
+    assert '# TYPE depth gauge' in text
+    assert "depth 3" in text
+    assert "# TYPE latency_seconds histogram" in text
+    assert "latency_seconds_count 1" in text
+    assert "latency_seconds_sum" in text
+    # cumulative buckets end at +Inf with the total count
+    assert 'latency_seconds_bucket{le="+Inf"} 1' in text
+
+
+def test_gauge_max_and_counter_monotonic():
+    reg = MetricsRegistry()
+    g = reg.gauge("peak")
+    g.max(4.0)
+    g.max(2.0)
+    assert g.value == 4.0
+    with pytest.raises(ValueError):
+        reg.counter("c").inc(-1)
+
+
+# ------------------------------------------------------------------ sampler --
+
+def test_sampler_jsonl_round_trip(tmp_path):
+    reg = MetricsRegistry()
+    c = reg.counter("events")
+    path = tmp_path / "series.jsonl"
+    with Sampler(reg, str(path), interval_s=0.01) as s:
+        for i in range(5):
+            c.inc()
+    assert s.samples_written >= 1           # stop() always writes a final one
+    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    assert len(lines) == s.samples_written
+    for rec in lines:
+        assert set(rec) == {"t", "metrics"}
+        assert rec["metrics"]["events"] <= 5
+    # the series is monotone in t and in the counter
+    ts = [rec["t"] for rec in lines]
+    vals = [rec["metrics"]["events"] for rec in lines]
+    assert ts == sorted(ts)
+    assert vals == sorted(vals)
+    assert vals[-1] == 5                    # final sample sees the last inc
