@@ -764,6 +764,56 @@ def bench_observability(quick=False):
         f"total_ms={total_ms:.2f};sampled={len(reqs)}")
 
 
+_HISTORY_CAP = 20
+
+
+def bench_slo(quick=False):
+    """Closed-loop p99 batching (§14): adaptive max_wait vs a fixed wait.
+
+    Both gateways run the SAME deliberately mis-tuned 20 ms straggler wait
+    against a 5 ms p99 objective at low concurrency (batches never fill, so
+    a fixed-wait worker sits out the full window on every batch — the
+    configuration a static tune gets wrong under a shifted load shape). The
+    fixed gateway pays the window at p99; the adaptive gateway's AIMD
+    controller watches the windowed p99 burn past the objective and shrinks
+    the wait toward the greedy floor. The CI gate asserts
+    ``toward_objective=yes``: |p99_adaptive - objective| <
+    |p99_fixed - objective| — the controller demonstrably steers p99 toward
+    the SLO. Bit-identity is untouched (only batching timing changes)."""
+    from benchmarks.load_gen import closed_loop
+    from repro.core.itemsets import pack_bits
+    from repro.serving import Gateway
+
+    num_rules, num_items = 4096, 256
+    objective_ms = 5.0
+    rb = _synthetic_rulebook(num_rules, num_items)
+    rng = np.random.default_rng(6)
+    baskets = list(pack_bits((rng.random((512, num_items)) < 0.1).astype(np.int8)))
+    n_req = 1_200 if quick else 3_000
+
+    with Gateway(rb, max_batch=64, max_wait_ms=20.0, cache_capacity=0,
+                 warmup="ladder") as gw:
+        fixed = closed_loop(gw, baskets, num_requests=n_req, concurrency=8)
+    row("obs_slo_fixed_wait",
+        fixed["wall_s"] / max(fixed["responses"], 1) * 1e6,
+        f"qps={fixed['qps']:.0f};p99_ms={fixed['p99_ms']:.2f};"
+        f"objective_ms={objective_ms};max_wait_ms=20.0")
+
+    with Gateway(rb, max_batch=64, max_wait_ms=20.0, p99_target_ms=objective_ms,
+                 cache_capacity=0, warmup="ladder") as gw:
+        adapt = closed_loop(gw, baskets, num_requests=n_req, concurrency=8)
+        ctrl = gw.wait_controller.snapshot()
+    toward = (abs(adapt["p99_ms"] - objective_ms)
+              < abs(fixed["p99_ms"] - objective_ms))
+    row("obs_slo_adaptive_wait",
+        adapt["wall_s"] / max(adapt["responses"], 1) * 1e6,
+        f"qps={adapt['qps']:.0f};p99_ms={adapt['p99_ms']:.2f};"
+        f"objective_ms={objective_ms};fixed_p99_ms={fixed['p99_ms']:.2f};"
+        f"final_wait_ms={ctrl['wait_ms']:.2f};ticks={ctrl['ticks']};"
+        f"decreases={ctrl['decreases']};"
+        f"toward_objective={'yes' if toward else 'no'}")
+
+
 def _persist_trajectory(path, new_rows, backend, quick):
     """Merge-update a committed BENCH_*.json trajectory file.
 
@@ -771,7 +821,13 @@ def _persist_trajectory(path, new_rows, backend, quick):
     every other committed row survives — a partial run can no longer
     clobber the whole trajectory — and the file is stamped with THIS run's
     actual wall-clock time (each file gets its own fresh stamp, not one
-    shared timestamp taken before any bench ran)."""
+    shared timestamp taken before any bench ran).
+
+    When a row is replaced, the superseded ``us_per_call`` is appended to
+    the row's ``history`` (bounded at the newest %d values) — the
+    per-row trajectory ``repro.obs.regress`` computes its noise-aware
+    baseline from. FAILED markers (negative values) never enter history.
+    """ % _HISTORY_CAP
     existing = []
     if os.path.exists(path):
         try:
@@ -780,6 +836,15 @@ def _persist_trajectory(path, new_rows, backend, quick):
         except (json.JSONDecodeError, OSError):
             existing = []          # unreadable trajectory: rebuild from this run
     fresh = {r["name"] for r in new_rows}
+    prior = {r.get("name"): r for r in existing}
+    for r in new_rows:
+        old = prior.get(r["name"])
+        hist = list(old.get("history", ())) if old else []
+        if old is not None:
+            old_us = old.get("us_per_call")
+            if isinstance(old_us, (int, float)) and old_us >= 0:
+                hist.append(old_us)
+        r["history"] = hist[-_HISTORY_CAP:]
     rows = [r for r in existing if r.get("name") not in fresh] + new_rows
     with open(path, "w") as f:
         json.dump({"backend": backend, "quick": quick, "unix_time": time.time(),
@@ -808,6 +873,7 @@ def main() -> None:
     bench_serve_gateway(q)
     bench_replicated_serve(q)
     bench_observability(q)
+    bench_slo(q)
 
     import jax
 

@@ -11,6 +11,14 @@ whole pipeline is one command:
 
 (`examples/serve_gateway.py` is the same flow, step by step; the smaller
 `examples/serve_rules.py` stops at the pre-assembled batch engine.)
+
+To watch that service against declared SLOs — burn-rate alerts, brownout
+admission, p99-adaptive batching (DESIGN.md §14) — add ``--slo``:
+
+    PYTHONPATH=src python -m repro.launch.serve --replicas 3 --slo \
+        --kill-replica-mid-load --alerts-jsonl alerts.jsonl
+
+(`examples/serve_slo.py` is the same loop, step by step.)
 """
 
 from repro.core.apriori import AprioriConfig, mine

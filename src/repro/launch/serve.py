@@ -17,6 +17,12 @@
       --kill-replica-mid-load --hot-swap-mid-load --deadline-ms 5000
   # machine-readable summary (the CI smoke gate reads this):
   PYTHONPATH=src python -m repro.launch.serve ... --json serve-smoke.json
+  # SLOs + burn-rate alerting + closed-loop reactions (DESIGN.md §14); the
+  # alert stream lands next to the metrics series and perfetto trace, and
+  # `python -m repro.launch.status` renders both offline:
+  PYTHONPATH=src python -m repro.launch.serve ... --replicas 2 \
+      --kill-replica-mid-load --slo --slo-p99-ms 50 \
+      --alerts-jsonl serve-alerts.jsonl --metrics-jsonl serve-series.jsonl
 
 The full paper-to-production pipeline in one command: the synthetic DB is
 ingested CHUNKED into an on-disk ``TransactionStore``, mined with the
@@ -103,7 +109,21 @@ def main():
     ap.add_argument("--metrics-jsonl", default="", metavar="PATH",
                     help="append periodic registry snapshots as JSONL while "
                          "the load runs (obs.Sampler time series)")
+    # active observability: SLOs + burn-rate alerting (DESIGN.md §14)
+    ap.add_argument("--slo", action="store_true",
+                    help="run the SLO evaluator over the serving registry "
+                         "(latency/availability/replica-health/generation-lag "
+                         "objectives, burn-rate alerts); with --replicas > 1 "
+                         "the router subscribes to alerts (brownout shedding, "
+                         "alert-triggered re-sync)")
+    ap.add_argument("--slo-p99-ms", type=float, default=50.0,
+                    help="latency SLO objective: p99 of request latency")
+    ap.add_argument("--alerts-jsonl", default="", metavar="PATH",
+                    help="append every alert state transition as JSONL "
+                         "(implies --slo)")
     args = ap.parse_args()
+    if args.alerts_jsonl and not args.slo:
+        args.slo = True
     if args.crash_worker_mid_load and not args.supervise:
         print("[serve] --crash-worker-mid-load implies --supervise (else the load hangs)")
         args.supervise = True
@@ -194,6 +214,30 @@ def main():
             sampler = Sampler(gw.metrics.registry, args.metrics_jsonl,
                               interval_s=0.25)
             sampler.start()
+        evaluator = None
+        if args.slo:
+            from repro.obs import BurnRule, SLOEvaluator, serving_slos
+
+            # CLI-lifetime burn windows: the SRE-workbook 60s/300s ladder is
+            # scaled down so a seconds-long smoke run can both FIRE and CLEAR
+            rules = (BurnRule("page", long_window_s=2.0, short_window_s=0.5,
+                              burn_threshold=10.0),
+                     BurnRule("warn", long_window_s=6.0, short_window_s=1.5,
+                              burn_threshold=3.0))
+            specs = serving_slos("router" if use_router else "gateway",
+                                 p99_ms=args.slo_p99_ms,
+                                 replicated=use_router, rules=rules)
+            evaluator = SLOEvaluator(gw.metrics.registry, specs,
+                                     interval_s=0.05, clear_after_s=0.5,
+                                     jsonl_path=args.alerts_jsonl or None)
+            if use_router:
+                # the closed loop (§14): availability alerts tighten
+                # admission, generation-lag alerts trigger replica re-sync
+                evaluator.subscribe(gw.handle_alert)
+            evaluator.start()
+            print(f"[slo] evaluating {len(specs)} SLOs "
+                  f"({', '.join(s.name for s in specs)}) "
+                  f"p99 objective {args.slo_p99_ms:g} ms")
         if args.supervise and not use_router:   # the router supervises itself
             supervisor = WorkerSupervisor(gw)
         # a minimal closed-loop client, intentionally independent of
@@ -292,6 +336,23 @@ def main():
                 if all(s == "healthy" for s in states):
                     break
                 time.sleep(0.02)
+        slo_status, alert_events = None, []
+        if evaluator is not None:
+            # alerts clear only once the bad samples age out of the long
+            # burn window + hysteresis — give them time to resolve so the
+            # summary (and the CI chaos gate) sees fire AND clear
+            clear_until = time.perf_counter() + 10.0
+            while time.perf_counter() < clear_until:
+                if all(s == "ok" for s in evaluator.states().values()):
+                    break
+                time.sleep(0.05)
+            evaluator.stop()
+            slo_status = evaluator.status()
+            alert_events = [e.to_json() for e in evaluator.alert_history()]
+            fired = sum(1 for e in alert_events if e["severity"] != "ok")
+            print(f"[slo] {len(alert_events)} alert transitions "
+                  f"({fired} fired, {len(alert_events) - fired} cleared); "
+                  f"final states: {evaluator.states()}")
         stats = gw.stats()
         if sampler is not None:
             sampler.stop()
@@ -318,6 +379,11 @@ def main():
 
     lat = np.asarray(sorted(latencies))
     pct = lambda q: float(np.percentile(lat, q)) * 1e3 if lat.size else 0.0
+    # gated percentiles come from the REGISTRY histogram (conservative
+    # bucket-upper-edge quantiles — the same numbers stats()/Prometheus/the
+    # SLO evaluator see); the raw client-side np.percentile view is kept as
+    # client_p*_ms so the two sources can be compared, never confused
+    hist = stats["latency"]
     if use_router:
         # aggregate the per-replica gateway views into the single-gateway
         # summary shape (CI reads the same fields either way)
@@ -341,7 +407,10 @@ def main():
         "rejected": rejected["n"],
         "generations": sorted(int(g) for g in generations),
         "qps": lat.size / wall if wall > 0 else 0.0,
-        "p50_ms": pct(50), "p95_ms": pct(95), "p99_ms": pct(99),
+        "p50_ms": hist["p50_ms"], "p95_ms": hist["p95_ms"],
+        "p99_ms": hist["p99_ms"],
+        "client_p50_ms": pct(50), "client_p95_ms": pct(95),
+        "client_p99_ms": pct(99),
         **agg,
         "crashed_requests": crashed["n"],
         "deadline_expired_requests": expired["n"],
@@ -359,7 +428,20 @@ def main():
             "max_generation_lag": stats["max_generation_lag"],
             "kills_fired": srv.fault_injection.kills_fired,
             "availability": lat.size / terminal if terminal else 0.0,
+            "brownout_level": stats["brownout_level"],
         })
+    if slo_status is not None:
+        summary["slo"] = slo_status
+        summary["alerts"] = alert_events
+        summary["alerts_fired"] = sum(
+            1 for e in alert_events if e["severity"] != "ok")
+        summary["alerts_cleared"] = sum(
+            1 for e in alert_events if e["severity"] == "ok")
+        from repro.launch.status import render_status
+
+        print(render_status(
+            metrics=None, slo_status=slo_status, alerts=alert_events,
+            replicas=stats.get("replicas"), title="final SLO status"))
     print(f"[serve] {summary['responses']} responses (+{summary['rejected']} rejected, "
           f"{summary['crashed_requests']} crashed, "
           f"{summary['deadline_expired_requests']} expired) "

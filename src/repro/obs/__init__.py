@@ -1,5 +1,6 @@
 """Shared observability substrate: metrics registry, span tracer, mining
-job counters (DESIGN.md §13)."""
+job counters (DESIGN.md §13) — plus the active layer on top (§14): SLO
+specs with burn-rate alerting and the bench-trajectory regression gate."""
 
 from .registry import (
     Counter,
@@ -10,9 +11,21 @@ from .registry import (
 )
 from .trace import Span, Tracer
 from .mining import MiningObs, MiningProgress, PHASES
+from .slo import (
+    AlertEvent,
+    BurnRule,
+    DEFAULT_RULES,
+    SLOEvaluator,
+    SLOSpec,
+    mining_slos,
+    serving_slos,
+)
 
 __all__ = [
+    "AlertEvent",
+    "BurnRule",
     "Counter",
+    "DEFAULT_RULES",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
@@ -20,6 +33,10 @@ __all__ = [
     "MiningProgress",
     "PHASES",
     "Sampler",
+    "SLOEvaluator",
+    "SLOSpec",
     "Span",
     "Tracer",
+    "mining_slos",
+    "serving_slos",
 ]

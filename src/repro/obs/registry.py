@@ -43,10 +43,17 @@ def _label_key(labels: Dict[str, str]) -> Tuple[Tuple[str, str], ...]:
     return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
 
 
+def _escape_label_value(v: str) -> str:
+    """Prometheus text-format label escaping: backslash, double-quote and
+    newline must be escaped inside the quoted label value."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
 def _prom_name(name: str, labels: Dict[str, str]) -> str:
     if not labels:
         return name
-    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    inner = ",".join(f'{k}="{_escape_label_value(v)}"'
+                     for k, v in sorted(labels.items()))
     return f"{name}{{{inner}}}"
 
 
@@ -257,6 +264,27 @@ class MetricsRegistry:
                     out[key] = m.value
                 else:
                     out[key] = m.value
+            return out
+
+    def raw_snapshot(self) -> dict:
+        """One atomic cut at full resolution — the SLO evaluator's input.
+
+        Counters and gauges map to plain floats; histograms map to
+        ``{"kind": "histogram", "counts": [...], "count": n, "sum": s}``
+        with the per-bucket counts intact, so a consumer can difference two
+        cuts and compute windowed error fractions ("requests over the
+        latency objective between t0 and t1") that ``snapshot()``'s
+        pre-reduced quantiles cannot express."""
+        with self.lock:
+            out: Dict[str, object] = {}
+            for m in self._metrics.values():
+                key = _prom_name(m.name, m.labels)
+                if isinstance(m, Histogram):
+                    counts, count, sum_s, _, _ = m._state()
+                    out[key] = {"kind": "histogram", "counts": counts,
+                                "count": count, "sum": sum_s}
+                else:
+                    out[key] = float(m.value)
             return out
 
     def to_prometheus(self) -> str:

@@ -90,12 +90,17 @@ class MicroBatcher:
         max_wait_ms: float = 1.0,
         queue_depth: int = 1024,
         metrics=None,
+        wait_controller=None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self._dispatch_fn = dispatch_fn
         self._max_batch = int(max_batch)
         self._max_wait_s = max(0.0, float(max_wait_ms)) / 1e3
+        # optional serving.controller.AdaptiveMaxWait: consulted once per
+        # batch for the straggler wait. Only dispatch TIMING changes — which
+        # requests coalesce — so response bit-identity is untouched (§14)
+        self._wait_controller = wait_controller
         self._metrics = metrics
         self._q: queue.Queue = queue.Queue(maxsize=int(queue_depth))
         self._closed = False
@@ -115,6 +120,19 @@ class MicroBatcher:
     def depth(self) -> int:
         """Requests currently queued (admission-pressure signal)."""
         return self._q.qsize()
+
+    @property
+    def capacity(self) -> int:
+        """Admission-queue bound — the denominator brownout shedding uses."""
+        return self._q.maxsize
+
+    @property
+    def current_max_wait_ms(self) -> float:
+        """The effective straggler wait: live controller value when adaptive,
+        else the fixed configuration."""
+        if self._wait_controller is not None:
+            return self._wait_controller.current_wait_ms
+        return self._max_wait_s * 1e3
 
     @property
     def closed(self) -> bool:
@@ -214,7 +232,9 @@ class MicroBatcher:
             if item is _SENTINEL:
                 break
             batch = [item]
-            deadline = time.perf_counter() + self._max_wait_s
+            wait_s = (self._wait_controller.current_wait_s()
+                      if self._wait_controller is not None else self._max_wait_s)
+            deadline = time.perf_counter() + wait_s
             while len(batch) < self._max_batch:
                 remaining = deadline - time.perf_counter()
                 try:

@@ -94,6 +94,7 @@ class Gateway:
         exclude_basket: bool = True,
         max_batch: int = 64,
         max_wait_ms: float = 1.0,
+        p99_target_ms: float | None = None,
         queue_depth: int = 1024,
         cache_capacity: int = 4096,
         data_axes: tuple = ("data",),
@@ -108,6 +109,13 @@ class Gateway:
         (1 and ``max_batch``) per generation before it serves; ``"ladder"``
         compiles every power-of-two bucket (no mid-load jit spikes at all);
         ``False`` compiles lazily on first use.
+
+        ``p99_target_ms``: enables the p99-targeted adaptive straggler wait
+        (§14): ``max_wait_ms`` becomes the wait CEILING (and starting point)
+        and a bounded-AIMD controller shrinks the wait whenever the windowed
+        latency p99 burns past the target — the adaptive gateway never waits
+        longer than the fixed configuration, it only gets out of the way
+        faster. ``None`` keeps the classic fixed wait.
 
         ``tracer``: optional :class:`repro.obs.Tracer`; sampled requests get
         cache-probe / queue-wait / batch-assembly / device-dispatch spans.
@@ -143,14 +151,26 @@ class Gateway:
         self.cache = BasketCache(cache_capacity)
         self._swap_lock = threading.RLock()
         self._generation = self._place(0, rulebook)
+        self.metrics.mark_generation_commit()   # freshness clock starts now
         if warmup:
             self._warm(self._generation)
+        self.wait_controller = None
+        if p99_target_ms is not None:
+            from repro.serving.controller import AdaptiveMaxWait
+
+            self.wait_controller = AdaptiveMaxWait(
+                self.metrics.latency,
+                objective_ms=float(p99_target_ms),
+                initial_wait_ms=max_wait_ms,   # ceiling == the fixed config
+                max_wait_ms=max_wait_ms,
+            )
         self._batcher = MicroBatcher(
             self._dispatch,
             max_batch=max_batch,
             max_wait_ms=max_wait_ms,
             queue_depth=queue_depth,
             metrics=self.metrics,
+            wait_controller=self.wait_controller,
         )
 
     # ---------------------------------------------------------- lifecycle --
@@ -299,12 +319,25 @@ class Gateway:
         """Current serving generation id."""
         return self._generation.generation
 
+    @property
+    def queue_depth(self) -> int:
+        """Requests currently queued in the batcher."""
+        return self._batcher.depth
+
+    @property
+    def queue_capacity(self) -> int:
+        """Admission-queue bound (brownout shedding's denominator, §14)."""
+        return self._batcher.capacity
+
     def stats(self) -> dict:
         gen = self._generation
         out = self.metrics.snapshot()
         out["generation"] = gen.generation
         out["num_rules"] = gen.rulebook.num_rules
         out["queue_depth"] = self._batcher.depth
+        out["max_wait_ms"] = self._batcher.current_max_wait_ms
+        if self.wait_controller is not None:
+            out["wait_controller"] = self.wait_controller.snapshot()
         out["cache"] = self.cache.snapshot()
         return out
 

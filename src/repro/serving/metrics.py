@@ -17,12 +17,14 @@ by bucket-wise addition instead of re-measuring.
 
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 from repro.obs.registry import (
     FLOOR_S as _FLOOR_S,       # re-exported for back-compat
     GROWTH as _GROWTH,
     NUM_BUCKETS as _NUM_BUCKETS,
+    Gauge,
     Histogram,
     MetricsRegistry,
 )
@@ -33,6 +35,27 @@ class LatencyHistogram(Histogram):
 
     def __init__(self, name: str = "latency_seconds", labels=None, lock=None):
         super().__init__(name, labels, lock=lock)
+
+
+class GenerationAgeGauge(Gauge):
+    """Live rulebook-freshness gauge (ROADMAP): seconds since the serving
+    generation was committed.  ``mark()`` stamps the commit instant; reads
+    compute the age at read time, so every snapshot/exposition sees the
+    CURRENT age without anyone having to poll-update a stored value — the
+    freshness SLO's signal can never go stale itself."""
+
+    def __init__(self, name: str = "generation_age_seconds", labels=None, lock=None):
+        super().__init__(name, labels, lock=lock)
+        self._commit_t = time.perf_counter()
+
+    def mark(self) -> None:
+        with self._lock:
+            self._commit_t = time.perf_counter()
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return time.perf_counter() - self._commit_t
 
 
 class _RegistryMetrics:
@@ -79,6 +102,14 @@ class GatewayMetrics(_RegistryMetrics):
 
     def __init__(self, registry: Optional[MetricsRegistry] = None):
         super().__init__(registry, prefix="gateway")
+        self.generation_age = self.registry.register(
+            GenerationAgeGauge("gateway_generation_age_seconds",
+                               lock=self.registry.lock))
+
+    def mark_generation_commit(self) -> None:
+        """Stamp the freshness clock — called when a generation commits
+        (initial placement and every hot-swap commit)."""
+        self.generation_age.mark()
 
     def record_admission(self, accepted: bool) -> None:
         self._inc("submitted" if accepted else "rejected")
@@ -100,7 +131,9 @@ class GatewayMetrics(_RegistryMetrics):
             self.latency.record(latency_s)
 
     def record_swap(self) -> None:
-        self._inc("swaps")
+        with self._lock:
+            self._inc("swaps")
+            self.generation_age.mark()
 
     def record_deadline_expired(self) -> None:
         self._inc("deadline_expired")
@@ -130,6 +163,7 @@ class GatewayMetrics(_RegistryMetrics):
         # histogram (they share the registry lock): a fully atomic cut.
         with self._lock:
             out = {f: self._counters[f].value for f in self._COUNTER_FIELDS}
+            out["generation_age_s"] = self.generation_age.value
             out["batch_occupancy"] = (
                 out["batch_rows_real"] / out["batch_rows_padded"]
                 if out["batch_rows_padded"] else 0.0)
@@ -159,12 +193,25 @@ class RouterMetrics(_RegistryMetrics):
         "swap_prepare_failures",  # replicas that failed two-phase prepare
         "coordinated_swaps",      # successful two-phase hot-swaps
         "replica_deaths",         # replicas declared dead (restart storm)
+        "brownout_sheds",         # requests shed by alert-driven brownout (§14)
+        "alert_resyncs",          # re-syncs triggered by a generation-lag alert
     )
 
     def __init__(self, registry: Optional[MetricsRegistry] = None):
         super().__init__(registry, prefix="router")
         self._max_lag = self.registry.gauge("router_max_generation_lag")
         self._cur_lag = self.registry.gauge("router_current_generation_lag")
+        # fraction of replicas currently HEALTHY — the replica-availability
+        # SLO's signal; 1.0 until the health monitor first reports
+        self._healthy_ratio = self.registry.gauge("router_healthy_replica_ratio")
+        self._healthy_ratio.set(1.0)
+        self.generation_age = self.registry.register(
+            GenerationAgeGauge("router_generation_age_seconds",
+                               lock=self.registry.lock))
+
+    def mark_generation_commit(self) -> None:
+        """Stamp the freshness clock at coordinated-swap commit time."""
+        self.generation_age.mark()
 
     def record_routed(self) -> None:
         self._inc("routed")
@@ -202,6 +249,21 @@ class RouterMetrics(_RegistryMetrics):
     def record_replica_death(self) -> None:
         self._inc("replica_deaths")
 
+    def record_brownout_shed(self) -> None:
+        with self._lock:
+            self._inc("brownout_sheds")
+            self._inc("shed")
+
+    def record_alert_resync(self) -> None:
+        self._inc("alert_resyncs")
+
+    def set_healthy_ratio(self, ratio: float) -> None:
+        self._healthy_ratio.set(ratio)
+
+    @property
+    def healthy_replica_ratio(self) -> float:
+        return float(self._healthy_ratio.value)
+
     def observe_generation_lag(self, lag: int) -> None:
         with self._lock:
             self._cur_lag.set(lag)
@@ -220,5 +282,7 @@ class RouterMetrics(_RegistryMetrics):
             out = {f: self._counters[f].value for f in self._COUNTER_FIELDS}
             out["max_generation_lag"] = int(self._max_lag.value)
             out["current_generation_lag"] = int(self._cur_lag.value)
+            out["healthy_replica_ratio"] = float(self._healthy_ratio.value)
+            out["generation_age_s"] = self.generation_age.value
             out["latency"] = self.latency.snapshot()
         return out

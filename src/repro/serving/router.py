@@ -206,9 +206,12 @@ class Replica:
             self.state = SUSPECT
 
     def note_success(self) -> None:
+        # successes end the failure streak but do NOT promote the replica:
+        # re-healthy is the monitor's call, after ``healthy_after_s`` of
+        # quiet (a suspect replica that answers one request hasn't proven
+        # anything yet, and an instant flip would make the health dip
+        # invisible to anything sampling the healthy-replica gauge)
         self.consecutive_failures = 0
-        if self.state == SUSPECT:
-            self.state = HEALTHY
 
     def mark_dead(self) -> bool:
         """Returns True on the transition (for once-only death accounting)."""
@@ -281,6 +284,10 @@ class Router:
         self.fault_injection = RouterFaultInjection()
         self._ring = HashRing(num_replicas, vnodes)
         self._closed = False
+        # alert-driven brownout (§14): 0 = normal, 1 = warn (shed above 50%
+        # aggregate queue fill), 2 = page (shed above 25%) — a burning
+        # availability SLO tightens admission instead of letting queues fill
+        self._brownout_level = 0
 
         # N fully independent gateways: own batcher, own cache, own device
         # placement. The jit cache is shared underneath (same shapes, same
@@ -342,6 +349,23 @@ class Router:
         if self._closed:
             self.metrics.record_shed()
             raise AdmissionRejected("router closed")
+        level = self._brownout_level
+        if level:
+            # brownout: admit only while aggregate queue fill stays under the
+            # level's budget — overload sheds EARLY (typed reject in ~µs)
+            # instead of queueing work the burning tier cannot absorb
+            depth = cap = 0
+            for rep in self._replicas:
+                if rep.available:
+                    depth += rep.gateway.queue_depth
+                    cap += rep.gateway.queue_capacity
+            budget = 0.5 if level == 1 else 0.25
+            if cap == 0 or depth >= cap * budget:
+                self.metrics.record_brownout_shed()
+                raise AdmissionRejected(
+                    f"brownout (availability alert, level {level}): "
+                    f"aggregate queue {depth}/{cap} over the {budget:.0%} budget"
+                )
         t0 = time.perf_counter()
         packed = self._replicas[0].gateway._pack_one(basket)
         k = min(self.default_top_k if top_k is None else int(top_k), self.num_items)
@@ -423,10 +447,40 @@ class Router:
             self._target_generation = target
             self._target_rulebook = rulebook
             self.metrics.record_coordinated_swap()
+            self.metrics.mark_generation_commit()   # freshness clock restarts
             if swap_sp is not None:
                 swap_sp.end(outcome="ok", prepared=len(prepared))
         self._observe_lag()
         return target
+
+    # ------------------------------------------------------- alert reactions --
+    def handle_alert(self, event) -> None:
+        """SLO-alert subscriber (§14): measurement → enforcement, closed loop.
+
+        Wire with ``evaluator.subscribe(router.handle_alert)``. Reactions
+        key on the alert's semantic ``signal``, not the spec name:
+
+        * ``availability`` — warn/page tighten admission (brownout level
+          1/2, see :meth:`submit`); a clear lifts the brownout.
+        * ``generation_lag`` / ``freshness`` — a burning staleness SLO
+          triggers an immediate replica re-sync instead of waiting for the
+          monitor's next pass.
+
+        Exceptions must not escape into the evaluator's emit path, so the
+        whole body is defensive — an unknown signal is ignored."""
+        signal = getattr(event, "signal", "")
+        severity = getattr(event, "severity", "ok")
+        if signal == "availability":
+            self._brownout_level = {"warn": 1, "page": 2}.get(severity, 0)
+        elif signal in ("generation_lag", "freshness") and severity != "ok":
+            self.metrics.record_alert_resync()
+            self._resync_lagging()
+            self._observe_lag()
+
+    @property
+    def brownout_level(self) -> int:
+        """Current alert-driven admission tightening (0 = normal)."""
+        return self._brownout_level
 
     @property
     def replicas(self) -> list:
@@ -451,6 +505,7 @@ class Router:
         ).snapshot()
         out["target_generation"] = self._target_generation
         out["num_replicas"] = len(self._replicas)
+        out["brownout_level"] = self._brownout_level
         out["replicas"] = [
             {
                 "id": rep.rid,
@@ -676,6 +731,13 @@ class Router:
             alive = gw._batcher.worker_alive
             if rep.state == HEALTHY and not alive:
                 rep.state = SUSPECT      # suspected until the supervisor revives it
+                # stamp the kill itself as a failure: without this, a
+                # supervisor restart landing within one monitor tick would
+                # satisfy the re-healthy check immediately (last_failure_t
+                # still at its value from a long-past attempt failure) and
+                # the suspect window — the observable health dip — would
+                # collapse to milliseconds.
+                rep.last_failure_t = now
             elif (
                 rep.state == SUSPECT
                 and alive
@@ -684,6 +746,8 @@ class Router:
             ):
                 rep.state = HEALTHY
                 rep.consecutive_failures = 0
+        healthy = sum(1 for rep in self._replicas if rep.state == HEALTHY)
+        self.metrics.set_healthy_ratio(healthy / len(self._replicas))
         self._observe_lag()
         self._resync_lagging()
 

@@ -389,3 +389,23 @@ def test_gateway_deadline_ms_bounds_the_request(rulebooks, baskets):
         assert s["deadline_expired"] == 1
         # deadline expiry is an explicit failure, never a silent drop
         assert s["completed"] == 2 and s["failed"] == 1
+
+
+# ------------------------------------------------ generation age (§14) -----
+def test_generation_age_gauge_resets_on_hot_swap(rulebooks):
+    """``generation_age_seconds`` is a LIVE gauge: it grows between reads
+    without anyone writing it, and a hot-swap commit re-stamps it — the
+    signal the freshness SLO watches."""
+    rb0, rb1 = rulebooks
+    with Gateway(rb0, max_batch=4, max_wait_ms=0.0, cache_capacity=0) as gw:
+        a1 = gw.metrics.generation_age.value
+        time.sleep(0.05)
+        a2 = gw.metrics.generation_age.value
+        assert a2 > a1 >= 0.0                  # ages with no writer
+        assert gw.stats()["generation_age_s"] >= a2
+        pre_swap = gw.metrics.generation_age.value
+        gw.hot_swap(rb1)
+        assert gw.metrics.generation_age.value < pre_swap   # re-stamped
+        # and it reaches the registry cut the SLO evaluator differences
+        cut = gw.metrics.registry.raw_snapshot()
+        assert 0.0 <= cut["gateway_generation_age_seconds"] < pre_swap

@@ -147,3 +147,64 @@ def test_sampler_jsonl_round_trip(tmp_path):
     assert ts == sorted(ts)
     assert vals == sorted(vals)
     assert vals[-1] == 5                    # final sample sees the last inc
+
+
+# -------------------------------------------- prometheus exposition (§14) --
+
+def test_prometheus_label_values_are_escaped():
+    reg = MetricsRegistry()
+    reg.counter("events", labels={"path": 'a\\b"c\nd'}).inc(1)
+    text = reg.to_prometheus()
+    # backslash, double-quote and newline escaped per the text format
+    assert 'events{path="a\\\\b\\"c\\nd"} 1' in text
+    assert text.count("\n# TYPE") + 1 == 1      # one family, one TYPE line
+
+
+def test_prometheus_histogram_series_are_consistent():
+    """``_bucket`` counts are cumulative, ``le`` edges are the histogram's
+    real bucket edges in increasing order ending at +Inf with the total,
+    and ``_count`` / ``_sum`` reconcile with the recorded samples."""
+    import re
+
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_seconds", labels={"tier": "serve"})
+    samples = [0.001, 0.001, 0.004, 0.050, 1.5]
+    for s in samples:
+        h.record(s)
+    text = reg.to_prometheus()
+    bucket_lines = re.findall(
+        r'lat_seconds_bucket\{le="([^"]+)",tier="serve"\} (\d+)', text)
+    assert bucket_lines[-1][0] == "+Inf"
+    assert int(bucket_lines[-1][1]) == len(samples)
+    edges = [float(le) for le, _ in bucket_lines[:-1]]
+    cums = [int(c) for _, c in bucket_lines]
+    assert edges == sorted(edges)               # increasing le edges
+    assert cums == sorted(cums)                 # cumulative counts
+    # every edge must actually cover its cumulative count of samples
+    for le, cum in zip(edges, cums):
+        assert sum(1 for s in samples if s <= le) >= cum
+    assert f"lat_seconds_count{{tier=\"serve\"}} {len(samples)}" in text
+    m = re.search(r'lat_seconds_sum\{tier="serve"\} ([0-9.e+-]+)', text)
+    assert float(m.group(1)) == pytest.approx(sum(samples), rel=1e-6)
+
+
+def test_raw_snapshot_shape_and_differencing():
+    """The SLO evaluator's input: full-resolution histogram counts that can
+    be differenced between cuts, plus plain floats for counters/gauges."""
+    reg = MetricsRegistry()
+    c = reg.counter("done")
+    reg.gauge("depth").set(2.0)
+    h = reg.histogram("lat_seconds")
+    h.record(0.004)
+    cut0 = reg.raw_snapshot()
+    assert cut0["done"] == 0.0 and cut0["depth"] == 2.0
+    hs = cut0["lat_seconds"]
+    assert hs["kind"] == "histogram" and hs["count"] == 1
+    assert sum(hs["counts"]) == 1 and hs["sum"] == pytest.approx(0.004)
+    c.inc(3)
+    h.record(0.100)
+    cut1 = reg.raw_snapshot()
+    assert cut1["done"] - cut0["done"] == 3.0
+    delta = [a - b for a, b in zip(cut1["lat_seconds"]["counts"], hs["counts"])]
+    assert sum(delta) == 1                      # exactly the new sample
+    assert cut0["lat_seconds"]["counts"] is not cut1["lat_seconds"]["counts"]

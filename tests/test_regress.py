@@ -1,0 +1,151 @@
+"""Bench-trajectory regression gate (obs.regress): noise-aware trajectory
+checks, declarative invariants, FAILED/missing-row handling, the CLI — and
+the committed BENCH_*.json files themselves (DESIGN.md §14)."""
+
+import copy
+import json
+import pathlib
+
+import pytest
+
+from repro.obs.regress import (INVARIANTS, check_files, check_trajectory,
+                               main, parse_derived)
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+COMMITTED = [str(REPO / n) for n in
+             ("BENCH_serve.json", "BENCH_fault.json", "BENCH_obs.json")]
+
+
+# ------------------------------------------------------------ trajectory --
+
+def test_stable_trajectory_passes_and_degraded_fails():
+    history = [100.0, 102.0, 98.0, 101.0, 99.0]
+    ok, _ = check_trajectory("row", 105.0, history)
+    assert ok
+    # a tight history gets the floor tolerance (30%): 1.5x is a regression
+    ok, detail = check_trajectory("row", 150.0, history)
+    assert not ok and "baseline=100" in detail
+
+
+def test_noisy_history_widens_the_gate():
+    noisy = [100.0, 160.0, 70.0, 140.0, 60.0]    # MAD = 40 -> tol = 160%
+    ok, _ = check_trajectory("row", 200.0, noisy)
+    assert ok                                    # inside the widened gate
+    tight = [100.0, 101.0, 99.0, 100.0, 100.0]
+    ok, _ = check_trajectory("row", 200.0, tight)
+    assert not ok                                # same latest, tight history
+
+
+def test_young_trajectory_passes_vacuously_and_improvement_always_passes():
+    ok, detail = check_trajectory("row", 9e9, [100.0, 100.0])
+    assert ok and "no baseline" in detail
+    ok, _ = check_trajectory("row", 1.0, [100.0] * 10)
+    assert ok                                    # only degradation flags
+
+
+def test_failed_markers_in_history_are_ignored():
+    ok, detail = check_trajectory("row", 100.0, [-1.0, 100.0, 100.0, 100.0])
+    assert ok and "n=3" in detail
+
+
+# ------------------------------------------------------- files + gates ----
+
+def write_bench(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps({"rows": rows}))
+    return str(p)
+
+
+def row(name, us=100.0, history=(100.0, 100.0, 100.0), derived=""):
+    return {"name": name, "us_per_call": us, "history": list(history),
+            "derived": derived}
+
+
+def test_check_files_flags_failed_row_and_invariant_violation(tmp_path):
+    rows = [
+        row("fine"),
+        row("regressed", us=1000.0),
+        row("crashed", us=-1.0),
+        row("serve_gateway_microbatch_c32",
+            derived="qps=100;speedup_vs_sequential=1.2x"),   # < 2.0 gate
+    ]
+    path = write_bench(tmp_path, "b.json", rows)
+    inv = {"serve_gateway_microbatch_c32": INVARIANTS["serve_gateway_microbatch_c32"]}
+    ok, findings = check_files([path], invariants=inv)
+    assert not ok
+    bad = {(f.row, f.check) for f in findings if not f.ok}
+    assert bad == {("regressed", "trajectory"), ("crashed", "failed_row"),
+                   ("serve_gateway_microbatch_c32", "invariant")}
+    assert findings[0].ok is False               # violations sort first
+
+
+def test_missing_gated_row_fails_by_default(tmp_path):
+    path = write_bench(tmp_path, "b.json", [row("fine")])
+    inv = {"fault_kill_resume_n60000": INVARIANTS["fault_kill_resume_n60000"]}
+    ok, findings = check_files([path], invariants=inv)
+    assert not ok
+    (f,) = [f for f in findings if not f.ok]
+    assert f.check == "missing_row" and f.row == "fault_kill_resume_n60000"
+
+
+def test_invariants_resolve_across_the_union_of_files(tmp_path):
+    a = write_bench(tmp_path, "a.json", [row("fine")])
+    b = write_bench(tmp_path, "b.json", [
+        row("fault_kill_resume_n60000", derived="parity=ok;replayed_levels=0")])
+    inv = {"fault_kill_resume_n60000": INVARIANTS["fault_kill_resume_n60000"]}
+    ok, _ = check_files([a, b], invariants=inv)
+    assert ok
+
+
+def test_unreadable_file_fails(tmp_path):
+    p = tmp_path / "broken.json"
+    p.write_text("{nope")
+    ok, findings = check_files([str(p)], invariants={})
+    assert not ok and findings[0].check == "failed_row"
+
+
+def test_parse_derived_tolerates_units_and_flat_fragments():
+    d = parse_derived("qps=1234;speedup=2.5x;note;hit_rate=80%")
+    assert d == {"qps": "1234", "speedup": "2.5x", "hit_rate": "80%"}
+
+
+# ----------------------------------------------- the committed files ------
+
+def test_committed_trajectories_pass_the_gate():
+    """The acceptance criterion: the gate CI runs must be green on the
+    repo's own committed trajectory files."""
+    ok, findings = check_files(COMMITTED)
+    assert ok, [f for f in findings if not f.ok]
+
+
+def test_synthetically_degraded_committed_copy_fails(tmp_path):
+    """...and a 10x-slowed copy of a gated row must NOT be green."""
+    data = json.loads((REPO / "BENCH_serve.json").read_text())
+    degraded = copy.deepcopy(data)
+    for r in degraded["rows"]:
+        if r["name"] == "serve_gateway_microbatch_c32":
+            # seed enough history that the trajectory gate is armed, then
+            # make the latest run 10x slower than that baseline
+            r["history"] = [r["us_per_call"]] * 3
+            r["us_per_call"] = r["us_per_call"] * 10.0
+    p = tmp_path / "BENCH_serve.json"
+    p.write_text(json.dumps(degraded))
+    ok, findings = check_files([str(p)] + COMMITTED[1:])
+    assert not ok
+    bad = [f for f in findings if not f.ok]
+    assert any(f.row == "serve_gateway_microbatch_c32"
+               and f.check == "trajectory" for f in bad)
+
+
+# ------------------------------------------------------------------- CLI --
+
+def test_cli_exit_codes_and_json_output(tmp_path, capsys):
+    good = write_bench(tmp_path, "good.json", [row("fine")])
+    assert main(["--check", good]) == 1          # default INVARIANTS missing
+    out = capsys.readouterr().out
+    assert "missing_row" in out and "FAIL" in out
+
+    assert main(["--check"] + COMMITTED + ["--json"]) == 0
+    rep = json.loads(capsys.readouterr().out)
+    assert rep["ok"] is True
+    assert all(f["ok"] for f in rep["findings"])

@@ -428,3 +428,117 @@ def test_chaos_exactly_one_terminal_outcome_per_request(rulebooks):
     # after close everything is drained; nothing new is admitted
     with pytest.raises(AdmissionRejected):
         r.submit([1, 2])
+
+
+# ----------------------------------------------- alert reactions (§14) ----
+def _alert(signal, severity):
+    from repro.obs import AlertEvent
+
+    return AlertEvent(slo=f"{signal}_spec", signal=signal, kind="error_ratio",
+                      severity=severity, previous="ok", burn_rate=20.0,
+                      window_s=2.0, value=0.5, objective=0.999,
+                      t_wall=0.0, message="test")
+
+
+def test_brownout_sheds_early_and_lifts_on_clear(rulebooks):
+    """An availability alert tightens admission: at level 2 (page) the
+    router sheds once aggregate queue fill crosses 25% of capacity, with a
+    typed reject naming the brownout; the clear lifts it."""
+    rb0, _ = rulebooks
+    with Router(rb0, 1, warmup=False, max_wait_ms=0.0, cache_capacity=0,
+                max_batch=1, queue_depth=4, supervise=False,
+                fault=FaultConfig(max_retries=0, backoff_s=0.01)) as r:
+        r.query(fresh_baskets(1, seed=20)[0], timeout=30)   # warm the path
+        assert r.brownout_level == 0
+        r.handle_alert(_alert("availability", "page"))
+        assert r.brownout_level == 2
+
+        r.fault_injection.delay_replica(0, 0.3)
+        futs, brownout_sheds = [], 0
+        for b in fresh_baskets(16, seed=21):
+            try:
+                futs.append(r.submit(b))
+            except AdmissionRejected as e:
+                assert "brownout" in str(e)
+                brownout_sheds += 1
+        # 25% of a 4-deep queue = 1 slot: the burst must shed early, long
+        # before the queue itself would have rejected anything
+        assert brownout_sheds > 0
+        assert r.metrics.brownout_sheds == brownout_sheds
+        assert r.metrics.shed >= brownout_sheds     # counted as shed too
+        r.fault_injection.delay_replica(0, 0.0)
+        for f in futs:
+            f.result(timeout=30)
+
+        r.handle_alert(_alert("availability", "ok"))
+        assert r.brownout_level == 0
+        assert r.query(fresh_baskets(1, seed=22)[0], timeout=30) is not None
+        assert r.stats()["brownout_level"] == 0
+
+
+def test_brownout_warn_level_is_looser_than_page(rulebooks):
+    rb0, _ = rulebooks
+    with Router(rb0, 1, warmup=False, supervise=False) as r:
+        r.handle_alert(_alert("availability", "warn"))
+        assert r.brownout_level == 1
+        r.handle_alert(_alert("availability", "page"))
+        assert r.brownout_level == 2
+
+
+def test_generation_lag_alert_forces_immediate_resync(rulebooks):
+    """With the background monitor effectively disabled, a lag alert is the
+    ONLY thing that can re-sync a stale replica — handle_alert must do it."""
+    rb0, rb1 = rulebooks
+    with Router(rb0, 2, warmup=False, max_wait_ms=0.0,
+                monitor_interval_s=3600.0, supervise=False) as r:
+        r.fault_injection.fail_swap_on(1)
+        assert r.hot_swap(rb1) == 1
+        assert r._replicas[1].gateway.generation == 0       # stale
+        r.fault_injection.clear_swap_failures()
+
+        r.handle_alert(_alert("generation_lag", "page"))
+        assert r._replicas[1].gateway.generation == 1       # caught up NOW
+        assert r.metrics.alert_resyncs == 1
+        assert r.stats()["current_generation_lag"] == 0
+
+
+def test_unknown_alert_signal_is_ignored(rulebooks):
+    rb0, _ = rulebooks
+    with Router(rb0, 1, warmup=False, supervise=False) as r:
+        r.handle_alert(_alert("vibes", "page"))
+        assert r.brownout_level == 0
+        assert r.metrics.alert_resyncs == 0
+
+
+def test_healthy_ratio_gauge_dips_through_kill_then_recovers(rulebooks):
+    """The gauge the replica_availability SLO watches: a replica kill must
+    hold the ratio below 1.0 for at least the suspect window (so a sampling
+    evaluator can SEE it), then return to 1.0 after supervised recovery."""
+    rb0, _ = rulebooks
+    with Router(rb0, 2, warmup=False, max_wait_ms=0.0, cache_capacity=0,
+                monitor_interval_s=0.01,
+                fault=FaultConfig(max_retries=3, backoff_s=0.01)) as r:
+        assert r.metrics.healthy_replica_ratio == 1.0
+        r.fault_injection.kill_replica(0)
+        for b in fresh_baskets(8, seed=23):     # trigger the armed kill
+            r.query(b, timeout=30)
+        assert _wait_until(lambda: r.metrics.healthy_replica_ratio < 1.0, 5.0)
+        assert r.fault_injection.kills_fired == 1
+        assert _wait_until(lambda: r.metrics.healthy_replica_ratio == 1.0, 10.0)
+        assert _wait_until(lambda: all(rep.state == HEALTHY
+                                       for rep in r._replicas), 5.0)
+        # the gauge rides the registry too (the SLO evaluator's input)
+        assert r.metrics.registry.raw_snapshot()[
+            "router_healthy_replica_ratio"] == 1.0
+
+
+def test_router_generation_age_resets_on_coordinated_swap(rulebooks):
+    rb0, rb1 = rulebooks
+    with Router(rb0, 2, warmup=False, max_wait_ms=0.0, supervise=False) as r:
+        time.sleep(0.05)
+        pre_swap = r.metrics.generation_age.value
+        assert pre_swap >= 0.05
+        r.hot_swap(rb1)
+        assert r.metrics.generation_age.value < pre_swap
+        assert r.metrics.registry.raw_snapshot()[
+            "router_generation_age_seconds"] < pre_swap

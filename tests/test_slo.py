@@ -1,0 +1,310 @@
+"""SLO engine (obs.slo): burn-rate math over synthetic cuts, the
+ok -> warn -> page state machine (immediate upgrades, hysteresis on
+downgrades, transition-only dedup), the JSONL alert stream, and the
+canonical spec builders (DESIGN.md §14)."""
+
+import json
+
+import pytest
+
+from repro.obs import (AlertEvent, BurnRule, SLOEvaluator, SLOSpec,
+                       mining_slos, serving_slos)
+from repro.obs.registry import MetricsRegistry
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+PAGE_RULE = BurnRule("page", long_window_s=10.0, short_window_s=2.0,
+                     burn_threshold=10.0)
+
+
+def make_eval(spec, **kw):
+    clock = FakeClock()
+    ev = SLOEvaluator(MetricsRegistry(), [spec], clear_after_s=1.0,
+                      now_fn=clock, **kw)
+    return ev, clock
+
+
+def ratio_spec(**overrides):
+    kw = dict(name="avail", kind="error_ratio", signal="availability",
+              bad=("bad",), good=("good",), target_ratio=0.99,
+              rules=(PAGE_RULE,))
+    kw.update(overrides)
+    return SLOSpec(**kw)
+
+
+# ------------------------------------------------------------- burn math --
+
+def test_error_ratio_burn_fires_page_and_reports_burn_rate():
+    ev, clock = make_eval(ratio_spec())
+    ev.tick(cut={"bad": 0.0, "good": 0.0})
+    clock.advance(1.0)
+    assert ev.tick(cut={"bad": 0.0, "good": 100.0}) == []
+    clock.advance(1.0)
+    events = ev.tick(cut={"bad": 50.0, "good": 150.0})
+    # windowed ratio 50/200 = 0.25; budget 0.01 -> burn 25x >= 10 on BOTH
+    # windows (the burst is inside the 2s short window too)
+    assert [e.severity for e in events] == ["page"]
+    assert events[0].previous == "ok"
+    assert events[0].burn_rate == pytest.approx(25.0)
+    assert events[0].window_s == 10.0
+    assert ev.states() == {"avail": "page"}
+
+
+def test_no_data_and_clean_windows_stay_ok():
+    ev, clock = make_eval(ratio_spec())
+    assert ev.tick(cut={}) == []                 # no counters at all
+    clock.advance(1.0)
+    assert ev.tick(cut={"bad": 0.0, "good": 500.0}) == []
+    assert ev.states() == {"avail": "ok"}
+
+
+def test_short_window_gates_stale_burns():
+    """An old burst still inside the long window but outside the short one
+    must NOT fire: the multi-window AND is what makes recovery fast."""
+    ev, clock = make_eval(ratio_spec())
+    ev.tick(cut={"bad": 0.0, "good": 0.0})
+    # jump 5s, arriving with a burst already in the books: the long window
+    # (10s) spans it (burn 20x), but the short window (2s) only ever sees
+    # the clean recent deltas
+    clock.advance(5.0)
+    ev.tick(cut={"bad": 100.0, "good": 400.0})
+    clock.advance(0.5)
+    ev.tick(cut={"bad": 100.0, "good": 500.0})
+    clock.advance(0.5)
+    assert ev.tick(cut={"bad": 100.0, "good": 600.0}) == []
+    assert ev.alert_history() == []
+    assert ev.states() == {"avail": "ok"}
+
+
+def test_latency_kind_counts_over_threshold_buckets():
+    spec = SLOSpec(name="lat", kind="latency", signal="latency",
+                   metric="latency_seconds", threshold_s=0.05,
+                   target_ratio=0.9, rules=(BurnRule("page", 10.0, 2.0, 5.0),))
+    reg = MetricsRegistry()
+    h = reg.histogram("latency_seconds")
+    clock = FakeClock()
+    ev = SLOEvaluator(reg, [spec], clear_after_s=1.0, now_fn=clock)
+    ev.tick()                                    # baseline: empty histogram
+    for _ in range(95):
+        h.record(0.001)
+    for _ in range(5):
+        h.record(0.2)
+    clock.advance(1.0)
+    assert ev.tick() == []                       # 5% errs = burn 0.5 < 5
+    for _ in range(100):
+        h.record(0.2)                            # all over the objective now
+    clock.advance(1.0)
+    events = ev.tick()
+    assert [e.severity for e in events] == ["page"]
+    assert events[0].kind == "latency"
+    assert events[0].objective == pytest.approx(0.05)
+
+
+def test_gauge_bound_both_directions():
+    above = SLOSpec(name="age", kind="gauge_bound", signal="freshness",
+                    metric="g", bound=5.0, above_is_error=True,
+                    target_ratio=0.9, rules=(BurnRule("page", 10.0, 2.0, 5.0),))
+    ev, clock = make_eval(above)
+    for v in (1.0, 1.0, 10.0, 10.0):             # half the samples violate
+        ev.tick(cut={"g": v})
+        clock.advance(0.5)
+    assert ev.states() == {"age": "page"}        # 0.5 / 0.1 budget = 5x
+
+    below = SLOSpec(name="healthy", kind="gauge_bound", signal="availability",
+                    metric="g", bound=1.0, above_is_error=False,
+                    target_ratio=0.9, rules=(BurnRule("page", 10.0, 2.0, 5.0),))
+    ev2, clock2 = make_eval(below)
+    for v in (1.0, 1.0, 0.5, 0.5):               # dips BELOW the floor err
+        ev2.tick(cut={"g": v})
+        clock2.advance(0.5)
+    assert ev2.states() == {"healthy": "page"}
+
+
+def test_throughput_floor():
+    spec = SLOSpec(name="tput", kind="throughput", signal="throughput",
+                   metric="rows", floor_per_s=100.0, target_ratio=0.99,
+                   rules=(BurnRule("page", 2.0, 1.0, 10.0),))
+    ev, clock = make_eval(spec)
+    ev.tick(cut={"rows": 0.0})
+    clock.advance(1.0)
+    assert ev.tick(cut={"rows": 1000.0}) == []   # 1000 rows/s >= floor
+    clock.advance(2.0)
+    assert ev.tick(cut={"rows": 1001.0}) == []   # stall begins (short window
+    clock.advance(0.5)                           # has no delta yet)
+    events = ev.tick(cut={"rows": 1001.0})       # ~0 rows/s < floor: fire
+    assert [e.severity for e in events] == ["page"]
+
+
+# ---------------------------------------------------- state machine -------
+
+def burn_cut(n):
+    """A cut n steps into a sustained 50% error burn."""
+    return {"bad": 50.0 * n, "good": 50.0 * n}
+
+
+def test_sustained_burn_emits_exactly_one_event():
+    ev, clock = make_eval(ratio_spec())
+    ev.tick(cut=burn_cut(0))
+    for n in range(1, 8):                        # burning for 7 straight ticks
+        clock.advance(0.5)
+        ev.tick(cut=burn_cut(n))
+    history = ev.alert_history()
+    assert [e.severity for e in history] == ["page"]     # dedup: once, not 7x
+
+
+def test_downgrade_needs_hysteresis_and_calm_ticks_dont_flap():
+    ev, clock = make_eval(ratio_spec())
+    ev.tick(cut={"bad": 0.0, "good": 0.0})
+    clock.advance(1.0)
+    ev.tick(cut={"bad": 50.0, "good": 50.0})
+    assert ev.states() == {"avail": "page"}
+
+    # jump past both windows so every further delta is clean
+    clock.advance(11.0)
+    ev.tick(cut={"bad": 50.0, "good": 1000.0})   # calm verdict -> pending
+    assert ev.states() == {"avail": "page"}      # hysteresis: not yet
+    clock.advance(0.5)
+    ev.tick(cut={"bad": 50.0, "good": 1100.0})   # 0.5s < clear_after 1.0s
+    assert ev.states() == {"avail": "page"}
+    clock.advance(0.6)
+    events = ev.tick(cut={"bad": 50.0, "good": 1200.0})
+    assert [e.severity for e in events] == ["ok"]
+    assert events[0].previous == "page" and events[0].cleared
+    # the full arc is exactly two transitions: fire once, clear once
+    assert [e.severity for e in ev.alert_history()] == ["page", "ok"]
+
+
+def test_refire_during_pending_resets_the_clear_timer():
+    ev, clock = make_eval(ratio_spec())
+    ev.tick(cut={"bad": 0.0, "good": 0.0})
+    clock.advance(1.0)
+    ev.tick(cut={"bad": 50.0, "good": 50.0})     # page
+    clock.advance(11.0)
+    ev.tick(cut={"bad": 50.0, "good": 1000.0})   # calm -> pending clear
+    clock.advance(0.8)
+    # a fresh burst while the clear is pending: both windows burn again
+    ev.tick(cut={"bad": 550.0, "good": 1000.0})
+    assert ev.states() == {"avail": "page"}      # still page, no flap
+    clock.advance(11.0)
+    ev.tick(cut={"bad": 550.0, "good": 9000.0})  # calm again, pending restarts
+    clock.advance(0.8)
+    ev.tick(cut={"bad": 550.0, "good": 9100.0})  # 0.8s < 1.0s: NOT cleared
+    assert ev.states() == {"avail": "page"}
+    clock.advance(0.3)
+    ev.tick(cut={"bad": 550.0, "good": 9200.0})
+    assert ev.states() == {"avail": "ok"}
+    assert [e.severity for e in ev.alert_history()] == ["page", "ok"]
+
+
+def test_warn_then_page_escalates_immediately():
+    rules = (BurnRule("page", 10.0, 2.0, burn_threshold=20.0),
+             BurnRule("warn", 10.0, 2.0, burn_threshold=5.0))
+    ev, clock = make_eval(ratio_spec(rules=rules))
+    ev.tick(cut={"bad": 0.0, "good": 0.0})
+    clock.advance(1.0)
+    ev.tick(cut={"bad": 10.0, "good": 90.0})     # 10% -> burn 10: warn only
+    assert ev.states() == {"avail": "warn"}
+    clock.advance(0.5)
+    ev.tick(cut={"bad": 60.0, "good": 140.0})    # 30% -> burn 30: page NOW
+    assert ev.states() == {"avail": "page"}      # upgrade skips hysteresis
+    assert [e.severity for e in ev.alert_history()] == ["warn", "page"]
+
+
+# ------------------------------------------------- fan-out + lifecycle ----
+
+def test_jsonl_stream_and_subscriber_isolation(tmp_path):
+    path = tmp_path / "alerts.jsonl"
+    spec = ratio_spec()
+    clock = FakeClock()
+    got = []
+    ev = SLOEvaluator(MetricsRegistry(), [spec], clear_after_s=1.0,
+                      interval_s=999.0, jsonl_path=str(path), now_fn=clock)
+    ev.subscribe(lambda e: got.append(e))
+    bad_calls = []
+    ev.subscribe(lambda e: (bad_calls.append(e), 1 / 0))   # raising subscriber
+    with ev:
+        clock.advance(1.0)
+        ev.tick(cut={"bad": 0.0, "good": 0.0})
+        clock.advance(1.0)
+        ev.tick(cut={"bad": 50.0, "good": 50.0})
+    assert [e.severity for e in got] == ["page"]
+    assert len(bad_calls) == 1
+    assert ev.subscriber_errors == 1             # counted, never fatal
+    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    assert [rec["severity"] for rec in lines] == ["page"]
+    assert set(lines[0]) == {
+        "slo", "signal", "kind", "severity", "previous", "burn_rate",
+        "window_s", "value", "objective", "t_wall", "message"}
+    assert lines[0]["slo"] == "avail" and lines[0]["signal"] == "availability"
+
+
+def test_status_exposes_burns_and_values():
+    ev, clock = make_eval(ratio_spec())
+    ev.tick(cut={"bad": 0.0, "good": 0.0})
+    clock.advance(1.0)
+    ev.tick(cut={"bad": 25.0, "good": 75.0})
+    st = ev.status()["avail"]
+    assert st["state"] == "page"
+    assert st["value"] == pytest.approx(0.25)
+    assert st["objective"] == pytest.approx(0.99)
+    assert st["burns"]["10s"] == pytest.approx(25.0)
+
+
+# -------------------------------------------------------------- builders --
+
+def test_serving_slos_replicated_set():
+    specs = serving_slos("router", p99_ms=25.0, replicated=True,
+                         freshness_bound_s=30.0)
+    by_name = {s.name: s for s in specs}
+    assert set(by_name) == {"latency_p99", "availability",
+                            "replica_availability", "replica_disruption",
+                            "generation_lag", "freshness"}
+    assert by_name["latency_p99"].threshold_s == pytest.approx(0.025)
+    assert by_name["latency_p99"].metric == "router_latency_seconds"
+    # every availability-signal spec keys the router's brownout reaction
+    avail = [s for s in specs if s.signal == "availability"]
+    assert len(avail) == 3
+    assert "router_failovers" in by_name["replica_disruption"].bad
+    assert by_name["replica_availability"].above_is_error is False
+    assert by_name["freshness"].bound == pytest.approx(30.0)
+
+
+def test_serving_slos_single_gateway_and_mining():
+    specs = serving_slos("gateway")
+    assert {s.name for s in specs} == {"latency_p99", "availability"}
+    assert specs[1].bad == ("gateway_rejected", "gateway_failed")
+    (tput,) = mining_slos(rows_per_s_floor=1e4)
+    assert tput.kind == "throughput" and tput.floor_per_s == pytest.approx(1e4)
+
+
+def test_spec_and_rule_validation():
+    with pytest.raises(ValueError):
+        BurnRule("fatal", 10.0, 2.0, 1.0)        # unknown severity
+    with pytest.raises(ValueError):
+        BurnRule("page", 2.0, 10.0, 1.0)         # short > long
+    with pytest.raises(ValueError):
+        SLOSpec(name="x", kind="vibes")
+    with pytest.raises(ValueError):
+        SLOSpec(name="x", kind="latency", target_ratio=1.0)  # empty budget
+    with pytest.raises(ValueError):
+        SLOSpec(name="x", kind="latency", rules=())
+    with pytest.raises(ValueError):
+        SLOEvaluator(MetricsRegistry(), [ratio_spec(), ratio_spec()])
+
+
+def test_alert_event_round_trips_json():
+    ev = AlertEvent(slo="s", signal="latency", kind="latency", severity="warn",
+                    previous="ok", burn_rate=3.5, window_s=60.0, value=0.1,
+                    objective=0.05, t_wall=123.0, message="m")
+    assert AlertEvent(**ev.to_json()) == ev
+    assert not ev.cleared
