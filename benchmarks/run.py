@@ -637,6 +637,71 @@ def bench_fault_tolerance(quick=False):
         shutil.rmtree(d, ignore_errors=True)
 
 
+# ------------------------------------------------------------ incremental ----
+def bench_incremental(quick=False):
+    """Delta refresh latency vs full re-mine at 1% / 5% / 20% appended rows
+    (DESIGN.md §15), FIXED shape (40000 x 256, max_k 3) in quick mode too so
+    the trajectory always compares the same point.
+
+    For each delta point the base store (carrying its persisted count cache)
+    is cloned, FRAC·n new rows are appended, and the grown store is mined
+    both ways: a full SON re-mine and ``core.incremental.mine_delta`` (fold
+    cached counts arithmetically, re-verify only novel candidates over the
+    base shards). The two results must be dict-identical — parity is part of
+    the row, and the CI invariant gate holds the 1% point to >= 3x over full.
+    """
+    import shutil
+    import tempfile
+
+    from repro.core import incremental as inc
+    from repro.core.apriori import AprioriConfig
+    from repro.core.streaming import mine_son_streamed
+    from repro.data.store import append_chunks, ingest_quest, open_store
+    from repro.data.synthetic import QuestConfig, gen_transactions_chunked
+
+    n, items, chunk = 40_000, 256, 4_096
+    cfg = AprioriConfig(min_support=0.02, max_k=3, count_impl="jnp",
+                        representation="packed")
+    base_dir = tempfile.mkdtemp(prefix="bench_incr_base_")
+    clones = []
+    try:
+        store = ingest_quest(
+            QuestConfig(num_transactions=n, num_items=items, seed=11),
+            base_dir, shard_rows=chunk, chunk_rows=chunk)
+        inc.build_count_cache(store, cfg, chunk_rows=chunk)  # also warms jit
+        # largest delta first: it absorbs the delta path's one-off compiles,
+        # so the gated 1% point measures the warm steady state
+        for pct in (20, 5, 1):
+            d = tempfile.mkdtemp(prefix=f"bench_incr_p{pct}_")
+            clones.append(d)
+            shutil.rmtree(d)
+            shutil.copytree(base_dir, d)
+            extra = n * pct // 100
+            append_chunks(
+                gen_transactions_chunked(
+                    QuestConfig(num_transactions=extra, num_items=items,
+                                seed=100 + pct), chunk),
+                d)
+            grown = open_store(d)
+            t0 = time.perf_counter()
+            full = mine_son_streamed(grown, cfg, chunk_rows=chunk)
+            full_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            res, rep = inc.mine_delta(grown, cfg, chunk_rows=chunk)
+            delta_s = time.perf_counter() - t0
+            parity = "ok" if res.as_dict() == full.as_dict() else "DRIFTED"
+            row(f"fault_refresh_full_p{pct}", full_s * 1e6,
+                f"rows={grown.num_transactions};frequent={full.total_frequent}")
+            row(f"fault_refresh_delta_p{pct}", delta_s * 1e6,
+                f"speedup_vs_full={full_s / max(delta_s, 1e-9):.2f}x;"
+                f"mode={rep.mode};delta_rows={rep.delta_rows};"
+                f"novel={rep.novel_candidates};parity={parity}")
+    finally:
+        shutil.rmtree(base_dir, ignore_errors=True)
+        for d in clones:
+            shutil.rmtree(d, ignore_errors=True)
+
+
 # ------------------------------------------------------------- observability ----
 _OBS_SCRIPT = r"""
 import hashlib, json, sys, time
@@ -869,6 +934,7 @@ def main() -> None:
     bench_mine_representations(q)
     bench_out_of_core(q)
     bench_fault_tolerance(q)
+    bench_incremental(q)
     bench_rule_serving(q)
     bench_serve_gateway(q)
     bench_replicated_serve(q)

@@ -45,6 +45,10 @@ def main():
     # 4. serve them online: see the module docstring — `repro.launch.serve`
     #    runs store -> mine_streamed -> rulebook -> micro-batched gateway
     print("next: PYTHONPATH=src python -m repro.launch.serve --hot-swap-mid-load")
+    # 5. keep them fresh: appended rows fold in at delta cost and hot-swap
+    #    under live traffic (DESIGN.md §15, examples/serve_refresh.py)
+    print("then: PYTHONPATH=src python -m repro.launch.serve --refresh delta "
+          "--append-mid-load 0.05")
 
 
 if __name__ == "__main__":

@@ -11,5 +11,17 @@ from repro.core.candidates import generate_candidates, rows_isin
 from repro.core.mapreduce import MapReduceJob, mapreduce, hierarchical_psum
 from repro.core.apriori import AprioriConfig, AprioriResult, mine, make_count_step
 from repro.core.son import mine_son
-from repro.core.streaming import count_supports_streamed, mine_son_streamed, mine_streamed
+from repro.core.streaming import (
+    count_supports_streamed,
+    count_union_streamed,
+    mine_son_streamed,
+    mine_streamed,
+)
+from repro.core.incremental import (
+    CountCache,
+    DeltaReport,
+    build_count_cache,
+    load_count_cache,
+    mine_delta,
+)
 from repro.core.rules import extract_rules, Rule

@@ -70,6 +70,10 @@ class AprioriResult:
     num_transactions: int
     min_count: int
     fault_report: object | None = dataclasses.field(default=None, compare=False)
+    # the full pre-prune SON phase-2 union with exact counts, k -> (cands,
+    # counts) — populated only by mine_son_streamed(collect_union=True); the
+    # raw material of the incremental count cache (DESIGN.md §15)
+    union_counts: dict | None = dataclasses.field(default=None, compare=False)
 
     def frequent(self, k: int) -> np.ndarray:
         return self.levels[k][0] if k in self.levels else np.zeros((0, k), np.int32)

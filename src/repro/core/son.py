@@ -82,6 +82,27 @@ def union_local_winners(partitions, cfg: ap.AprioriConfig) -> dict:
     return merge_winners(local_winners(part, cfg) for part in partitions)
 
 
+def winners_to_arrays(union: dict) -> dict:
+    """Canonicalize a phase-1 union ``k -> set of tuples`` into sorted
+    ``k -> (K, k) int32`` candidate arrays — the count-export format the
+    streamed phase 2 and the incremental count cache share (DESIGN.md §15).
+    Sorting makes the layout deterministic: the same union always persists
+    and counts byte-identically."""
+    return {
+        k: np.array(sorted(s), dtype=np.int32).reshape(len(s), k)
+        for k, s in sorted(union.items())
+        if s
+    }
+
+
+def arrays_to_winners(levels: dict) -> dict:
+    """Inverse of :func:`winners_to_arrays` (accepts bare candidate arrays)."""
+    return {
+        k: {tuple(int(x) for x in row) for row in np.asarray(cands)}
+        for k, cands in levels.items()
+    }
+
+
 def mine_son(
     transactions_dense,
     cfg: ap.AprioriConfig = ap.AprioriConfig(),

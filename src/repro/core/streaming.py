@@ -396,61 +396,39 @@ def mine_streamed(
     return result
 
 
-def mine_son_streamed(
+def count_union_streamed(
     store: TransactionStore,
+    per_level: dict,
     cfg: ap.AprioriConfig = ap.AprioriConfig(),
     mesh=None,
     chunk_rows: int = 8192,
     prefetch: int = 2,
-    fault: FaultConfig | None = None,
+    shards: tuple | None = None,
     obs=None,
-) -> ap.AprioriResult:
-    """SON two-phase mining over an on-disk store, dict-equal to
-    ``mine_son`` (and to ``mine`` — SON is exact for any partitioning).
+) -> dict:
+    """Exact streamed counts of a multi-level candidate union in ONE pass
+    over the store (or over the shard range ``shards=(s0, s1)``).
 
-    Phase 1 maps over the store's *on-disk shards* as the SON partitions:
-    each shard is unpacked and mined locally to completion at the
-    shard-scaled threshold. With ``fault=FaultConfig(...)`` the shard
-    mappers run through the retrying work queue
-    (:func:`distributed.fault_tolerance.run_partitions`): a failed shard
-    read or mapper is re-executed with backoff — shards are re-loadable by
-    index, the HDFS-split property — stragglers are speculatively
-    re-issued, and the executor's :class:`FaultReport` lands on
-    ``result.fault_report``. In ``on_exhausted="skip"`` mode a dropped
-    partition is an EXPLICITLY reported completeness gap (SON's no-miss
-    guarantee needs every partition).
-
-    Phase 2 is ONE streamed exact count of the union — two distributed
-    rounds total, never the whole DB in memory.
+    ``per_level`` maps ``k -> (K_k, k) int32`` candidate arrays; the return
+    maps ``k -> (K_k,) int64`` counts, aligned. Every level's candidate
+    passes are device-placed up front (the union is the modest survivor set,
+    not a full level's candidates — this trades the max_candidates_per_pass
+    memory bound for a single disk scan), then every DB chunk folds into
+    every pass's accumulator. This is SON's phase 2 made reusable: the full
+    mine counts the whole union over the whole store, the delta miner
+    (DESIGN.md §15) counts the union over appended shards and the novel
+    candidates over the base shards — same kernel path, same exactness
+    argument (zero-padded rows are inert).
     """
-    n, num_items = store.num_transactions, store.num_items
-    min_count = max(1, math.ceil(cfg.min_support * n))
     chunk_rows = _effective_chunk_rows(chunk_rows, cfg, mesh)
-
-    # ---- phase 1: local mining per on-disk shard, union of local winners --
-    report = None
-    if fault is None:
-        union = son_mod.union_local_winners(
-            (store.partition_dense(p) for p in range(store.num_partitions)), cfg
-        )
-    else:
-        def map_shard(p: int) -> dict:
-            # re-reads shard p from disk on every (re-)execution — idempotent
-            return son_mod.local_winners(store.partition_dense(p), cfg)
-
-        winners, report = run_partitions(map_shard, store.num_partitions, fault,
-                                         obs=obs)
-        union = son_mod.merge_winners(w for w in winners if w is not None)
-
-    # ---- phase 2: ONE streamed exact count of the whole union ----
-    # All levels' candidate passes are device-placed up front (the union is
-    # the modest survivor set, not a full level's candidates — this trades
-    # the max_candidates_per_pass memory bound for a single disk scan), then
-    # every DB chunk folds into every pass's accumulator: one pass over the
-    # store total, the SON round-count promise kept at the I/O layer too.
+    num_items = store.num_items
     accum_step = make_accum_count_step(mesh, cfg)
     quantum = ap._candidate_quantum(cfg, mesh)
-    per_level = {k: np.array(sorted(union[k]), dtype=np.int32) for k in sorted(union)}
+    per_level = {
+        k: np.asarray(cands, dtype=np.int32)
+        for k, cands in sorted(per_level.items())
+        if np.asarray(cands).shape[0]
+    }
     units = []   # (k, start, rows, c_dev, len_dev, acc)
     for k, cands in per_level.items():
         for start in range(0, cands.shape[0], cfg.max_candidates_per_pass):
@@ -464,7 +442,7 @@ def mine_son_streamed(
         chunks = (
             chunk
             for chunk, _ in store.iter_chunks(
-                chunk_rows, representation=cfg.representation, pad=True
+                chunk_rows, representation=cfg.representation, pad=True, shards=shards
             )
         )
         it = ShardedBatchIterator(chunks, mesh, batch_spec(cfg.data_axes), prefetch=prefetch)
@@ -492,17 +470,85 @@ def mine_son_streamed(
             it.close()
 
     t_sync0 = time.perf_counter()
-    levels = {}
+    counts = {}
     for k, cands in per_level.items():
         sup = np.zeros(cands.shape[0], dtype=np.int64)
         for uk, start, rows, _, _, acc in units:
             if uk == k:
                 sup[start : start + rows] = np.asarray(acc)[:rows]
+        counts[k] = sup
+    if obs is not None:
+        obs.add_phase("host_sync", t_sync0, time.perf_counter())
+    return counts
+
+
+def mine_son_streamed(
+    store: TransactionStore,
+    cfg: ap.AprioriConfig = ap.AprioriConfig(),
+    mesh=None,
+    chunk_rows: int = 8192,
+    prefetch: int = 2,
+    fault: FaultConfig | None = None,
+    obs=None,
+    collect_union: bool = False,
+) -> ap.AprioriResult:
+    """SON two-phase mining over an on-disk store, dict-equal to
+    ``mine_son`` (and to ``mine`` — SON is exact for any partitioning).
+
+    Phase 1 maps over the store's *on-disk shards* as the SON partitions:
+    each shard is unpacked and mined locally to completion at the
+    shard-scaled threshold. With ``fault=FaultConfig(...)`` the shard
+    mappers run through the retrying work queue
+    (:func:`distributed.fault_tolerance.run_partitions`): a failed shard
+    read or mapper is re-executed with backoff — shards are re-loadable by
+    index, the HDFS-split property — stragglers are speculatively
+    re-issued, and the executor's :class:`FaultReport` lands on
+    ``result.fault_report``. In ``on_exhausted="skip"`` mode a dropped
+    partition is an EXPLICITLY reported completeness gap (SON's no-miss
+    guarantee needs every partition).
+
+    Phase 2 is ONE streamed exact count of the union — two distributed
+    rounds total, never the whole DB in memory.
+
+    ``collect_union=True`` additionally attaches the full PRE-prune union
+    with its exact counts as ``result.union_counts`` (``k -> (cands,
+    counts)``) — exactly what phase 2 computes and the prune would throw
+    away. The incremental count cache (DESIGN.md §15) persists this.
+    """
+    n = store.num_transactions
+    min_count = max(1, math.ceil(cfg.min_support * n))
+    chunk_rows = _effective_chunk_rows(chunk_rows, cfg, mesh)
+
+    # ---- phase 1: local mining per on-disk shard, union of local winners --
+    report = None
+    if fault is None:
+        union = son_mod.union_local_winners(
+            (store.partition_dense(p) for p in range(store.num_partitions)), cfg
+        )
+    else:
+        def map_shard(p: int) -> dict:
+            # re-reads shard p from disk on every (re-)execution — idempotent
+            return son_mod.local_winners(store.partition_dense(p), cfg)
+
+        winners, report = run_partitions(map_shard, store.num_partitions, fault,
+                                         obs=obs)
+        union = son_mod.merge_winners(w for w in winners if w is not None)
+
+    # ---- phase 2: ONE streamed exact count of the whole union ----
+    per_level = son_mod.winners_to_arrays(union)
+    counts = count_union_streamed(
+        store, per_level, cfg, mesh, chunk_rows=chunk_rows, prefetch=prefetch, obs=obs
+    )
+    levels = {}
+    for k, cands in per_level.items():
+        sup = counts[k]
         keep = sup >= min_count
         if keep.any():
             levels[k] = (cands[keep], sup[keep])
-    if obs is not None:
-        obs.add_phase("host_sync", t_sync0, time.perf_counter())
     return ap.AprioriResult(
-        levels=levels, num_transactions=n, min_count=min_count, fault_report=report
+        levels=levels, num_transactions=n, min_count=min_count, fault_report=report,
+        union_counts=(
+            {k: (cands, counts[k]) for k, cands in per_level.items()}
+            if collect_union else None
+        ),
     )

@@ -5,6 +5,7 @@ from repro.data.store import (
     TransactionStore,
     StoreWriter,
     open_store,
+    append_chunks,
     ingest_chunks,
     ingest_dense,
     ingest_lists,

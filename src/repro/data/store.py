@@ -53,6 +53,15 @@ class StoreManifest:
     mining checkpoints for this store live — resume tooling finds the
     snapshots next to the data they were taken over (DESIGN.md §11).
     Manifests written before the field existed read back with the default.
+
+    ``seq`` is the manifest generation: it bumps on every manifest rewrite
+    (shard append, count-cache refresh), so readers can tell "same directory,
+    new contents" apart from "unchanged". ``count_cache`` is the optional
+    incremental-mining section (DESIGN.md §15): metadata for the persisted
+    SON phase-1/2 count cache, whose arrays live in a sidecar ``.npz`` the
+    section points at. Appends preserve the section verbatim — the cache
+    records which shard prefix it covers, so the delta miner can validate it
+    against a grown store.
     """
 
     version: int
@@ -62,6 +71,8 @@ class StoreManifest:
     words: int                  # packed words per row == packed_words(num_items)
     shard_rows: tuple           # rows per shard, in order
     checkpoint_dir: str = DEFAULT_CHECKPOINT_DIR
+    seq: int = 0                # manifest generation; bumps on every rewrite
+    count_cache: dict | None = None   # incremental count-cache section (§15)
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -78,7 +89,24 @@ class StoreManifest:
             words=int(d["words"]),
             shard_rows=tuple(int(r) for r in d["shard_rows"]),
             checkpoint_dir=str(d.get("checkpoint_dir", DEFAULT_CHECKPOINT_DIR)),
+            seq=int(d.get("seq", 0)),
+            count_cache=d.get("count_cache"),
         )
+
+
+def _write_manifest(path: str, manifest: StoreManifest) -> None:
+    """Atomic manifest (re)write: temp file + ``os.replace``, so a reader (or
+    a crash) never observes a torn manifest — it sees the old one or the new
+    one, nothing in between. This is what makes appends torn-append-safe:
+    shard files land first, and only this single atomic rename publishes them.
+    """
+    final = os.path.join(path, MANIFEST_NAME)
+    tmp = final + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest.to_json(), f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
 
 
 def shard_filename(index: int) -> str:
@@ -113,6 +141,30 @@ class TransactionStore:
         """Where this store's mining checkpoints live (manifest pointer)."""
         return os.path.join(self.path, self.manifest.checkpoint_dir)
 
+    # ----------------------------------------------------------- count cache --
+    @property
+    def count_cache_meta(self) -> dict | None:
+        """The manifest's incremental count-cache section, or None (§15)."""
+        return self.manifest.count_cache
+
+    def set_count_cache(self, meta: dict | None) -> None:
+        """Publish (or clear) the count-cache section: atomic manifest rewrite
+        with a ``seq`` bump. Callers write the sidecar arrays FIRST, then call
+        this — a crash in between leaves the previous manifest (and previous
+        cache pointer) fully readable."""
+        old_file = (self.manifest.count_cache or {}).get("file")
+        self.manifest = dataclasses.replace(
+            self.manifest, seq=self.manifest.seq + 1, count_cache=meta
+        )
+        _write_manifest(self.path, self.manifest)
+        # GC the superseded sidecar only after the new manifest is durable
+        new_file = (meta or {}).get("file")
+        if old_file and old_file != new_file:
+            try:
+                os.remove(os.path.join(self.path, old_file))
+            except OSError:
+                pass
+
     # ---------------------------------------------------------- partitions --
     def partition_packed(self, index: int) -> np.ndarray:
         """One shard as a read-only memory-mapped (rows, words) uint32 array."""
@@ -136,6 +188,7 @@ class TransactionStore:
         representation: str = "packed",
         pad: bool = False,
         start_chunk: int = 0,
+        shards: tuple | None = None,
     ):
         """Yield ``(chunk, valid_rows)`` covering all n rows in order.
 
@@ -151,6 +204,11 @@ class TransactionStore:
         prefix of a full iteration — the resume cursor of DESIGN.md §11.
         Chunk indices are deterministic for a fixed ``chunk_rows``: chunk i
         is always rows ``[i*chunk_rows, (i+1)*chunk_rows)``.
+
+        ``shards=(s0, s1)`` restricts iteration to the half-open shard range
+        ``[s0, s1)`` — the delta miner's view (§15): chunk indices (and the
+        row coordinates above) are then local to the range, and shards
+        outside it are never opened.
         """
         if chunk_rows < 1:
             raise ValueError("chunk_rows must be >= 1")
@@ -158,12 +216,18 @@ class TransactionStore:
             raise ValueError("start_chunk must be >= 0")
         if representation not in ("packed", "dense"):
             raise ValueError(f"representation must be packed|dense, got {representation!r}")
+        s0, s1 = (0, self.num_partitions) if shards is None else shards
+        if not (0 <= s0 <= s1 <= self.num_partitions):
+            raise ValueError(
+                f"shards must satisfy 0 <= s0 <= s1 <= {self.num_partitions}, got {(s0, s1)}"
+            )
+        total = sum(self.manifest.shard_rows[s0:s1])
         skip = start_chunk * chunk_rows
-        if skip >= self.manifest.n:
+        if skip >= total:
             return
         parts: list[np.ndarray] = []
         have = 0
-        for s in range(self.num_partitions):
+        for s in range(s0, s1):
             if skip >= self.manifest.shard_rows[s]:
                 skip -= self.manifest.shard_rows[s]
                 continue
@@ -224,6 +288,41 @@ class StoreWriter:
         self._buf_rows = 0
         self._shards: list[int] = []
         self._closed = False
+        self._base: StoreManifest | None = None   # set in append mode only
+
+    @classmethod
+    def open_for_append(cls, path: str, shard_rows: int | None = None) -> "StoreWriter":
+        """Reopen an existing store to append shards (DESIGN.md §15).
+
+        Existing shard files are never rewritten: appended rows always start
+        a NEW shard (the last base shard may stay partial — ``shard_rows`` is
+        per-shard in the manifest, so readers don't care). New shard files
+        land on disk as they fill; only :meth:`close` publishes them, via one
+        atomic manifest rewrite with a ``seq`` bump. A crash before close
+        (torn append) therefore leaves the old manifest — and the old logical
+        store — fully readable; the orphaned shard files it may leave behind
+        are swept here on the next append open.
+        """
+        base = open_store(path)   # validates version/layout/words
+        m = base.manifest
+        w = cls.__new__(cls)
+        w.path = path
+        w.num_items = m.num_items
+        w.words = m.words
+        w.shard_rows = shard_rows or (max(m.shard_rows) if m.shard_rows else 8192)
+        if w.shard_rows < 1:
+            raise ValueError("shard_rows must be >= 1")
+        w._buf, w._buf_rows = [], 0
+        w._shards = list(m.shard_rows)
+        w._closed = False
+        w._base = m
+        # sweep orphan shards from a previous torn append (files past the
+        # manifest's shard list were written but never published)
+        i = len(w._shards)
+        while os.path.exists(os.path.join(path, shard_filename(i))):
+            os.remove(os.path.join(path, shard_filename(i)))
+            i += 1
+        return w
 
     # ------------------------------------------------------------- appends --
     def append_packed(self, packed_chunk: np.ndarray) -> None:
@@ -267,16 +366,26 @@ class StoreWriter:
         if self._closed:
             raise RuntimeError("StoreWriter already closed")
         self._flush()
-        manifest = StoreManifest(
-            version=LAYOUT_VERSION,
-            layout=LAYOUT_NAME,
-            n=sum(self._shards),
-            num_items=self.num_items,
-            words=self.words,
-            shard_rows=tuple(self._shards),
-        )
-        with open(os.path.join(self.path, MANIFEST_NAME), "w") as f:
-            json.dump(manifest.to_json(), f, indent=2)
+        if self._base is not None:
+            # append mode: preserve checkpoint_dir and the count-cache
+            # section (the cache self-describes which shard prefix it
+            # covers), bump seq, publish atomically
+            manifest = dataclasses.replace(
+                self._base,
+                n=sum(self._shards),
+                shard_rows=tuple(self._shards),
+                seq=self._base.seq + 1,
+            )
+        else:
+            manifest = StoreManifest(
+                version=LAYOUT_VERSION,
+                layout=LAYOUT_NAME,
+                n=sum(self._shards),
+                num_items=self.num_items,
+                words=self.words,
+                shard_rows=tuple(self._shards),
+            )
+        _write_manifest(self.path, manifest)
         self._closed = True
         return TransactionStore(self.path, manifest)
 
@@ -319,6 +428,25 @@ def ingest_chunks(chunks, num_items: int, path: str, shard_rows: int = 8192) -> 
             else:
                 w.append_dense(chunk)
     return open_store(path)
+
+
+def append_chunks(chunks, path: str, shard_rows: int | None = None) -> TransactionStore:
+    """Append row chunks (dense or packed, as :func:`ingest_chunks`) to an
+    EXISTING store — the continuous-refresh write path (DESIGN.md §15)."""
+    w = StoreWriter.open_for_append(path, shard_rows=shard_rows)
+    words = w.words
+    try:
+        for chunk in chunks:
+            chunk = np.asarray(chunk)
+            if chunk.dtype == np.uint32 and chunk.shape[1] == words:
+                w.append_packed(chunk)
+            else:
+                w.append_dense(chunk)
+        return w.close()
+    except BaseException:
+        # leave the torn append unpublished: old manifest stays authoritative
+        w._closed = True
+        raise
 
 
 def ingest_dense(dense: np.ndarray, path: str, shard_rows: int = 8192) -> TransactionStore:

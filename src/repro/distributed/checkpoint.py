@@ -92,11 +92,21 @@ class MiningState:
     acc: np.ndarray | None = None       # (kp,) int32, in-progress pass
 
 
-def store_fingerprint(store) -> dict:
-    """Identity of the data a checkpoint is valid for."""
+def store_fingerprint(store, num_shards: int | None = None) -> dict:
+    """Identity of the data a checkpoint is valid for.
+
+    By default the fingerprint covers EVERY shard, so appending rows to the
+    store invalidates a full-mine checkpoint (its counts covered fewer rows
+    than the store now holds — resuming would be silently wrong). The
+    incremental path (DESIGN.md §15) passes ``num_shards`` to fingerprint
+    only the shard PREFIX its counts actually cover: the same grown store
+    then validates against a pre-append fingerprint, because the delta miner
+    counts the appended shards separately.
+    """
     m = store.manifest
-    return {"n": m.n, "num_items": m.num_items, "words": m.words,
-            "shard_rows": list(m.shard_rows)}
+    rows = m.shard_rows if num_shards is None else m.shard_rows[:num_shards]
+    return {"n": int(sum(rows)), "num_items": m.num_items, "words": m.words,
+            "shard_rows": list(rows)}
 
 
 def mining_fingerprint(cfg, chunk_rows: int) -> dict:

@@ -18,6 +18,11 @@
   # retryable SON phase 1 over the store's shards:
   PYTHONPATH=src python -m repro.launch.mine ... --store /data/quest_2m \
       --algo son --max-partition-retries 2
+  # incremental (DESIGN.md §15): seed the count cache once, then each later
+  # run folds ONLY the rows appended since it (dict-identical result):
+  PYTHONPATH=src python -m repro.launch.mine ... --store /data/quest_2m \
+      --count-cache
+  PYTHONPATH=src python -m repro.launch.mine ... --store /data/quest_2m --delta
   # observability (DESIGN.md §13): live per-level progress + Hadoop-style
   # job counters + a perfetto-loadable trace of every mining phase:
   PYTHONPATH=src python -m repro.launch.mine ... --store /data/quest_2m \
@@ -118,6 +123,18 @@ def main():
     ap.add_argument("--max-partition-retries", type=int, default=None, metavar="N",
                     help="SON streamed phase 1: run shard mappers through the "
                          "retrying executor with N re-executions per partition")
+    ap.add_argument("--count-cache", action="store_true",
+                    help="SON streamed mine that ALSO persists the pre-prune "
+                         "phase-2 union counts into the store manifest as the "
+                         "incremental count cache (DESIGN.md §15, the seed "
+                         "for --delta); needs --store")
+    ap.add_argument("--delta", action="store_true",
+                    help="incremental mine: fold rows appended since the "
+                         "count cache generation into it and re-verify only "
+                         "novel candidates (core.incremental.mine_delta; "
+                         "full-scan fallback on a cold/invalid cache or an "
+                         "oversized delta — the report says which); needs "
+                         "--store")
     ap.add_argument("--store", default="", metavar="DIR",
                     help="on-disk transaction store: mine out-of-core via the "
                          "streaming driver (ingested here if absent)")
@@ -189,8 +206,13 @@ def main():
 
     if (args.checkpoint_every or args.resume) and store is None:
         ap.error("--checkpoint-every/--resume need the streamed driver: add --store DIR")
-    if args.max_partition_retries is not None and (store is None or args.algo != "son"):
-        ap.error("--max-partition-retries needs --store DIR and --algo son")
+    if (args.count_cache or args.delta) and store is None:
+        ap.error("--count-cache/--delta need the on-disk store: add --store DIR")
+    if args.max_partition_retries is not None and (
+        store is None or (args.algo != "son" and not (args.count_cache or args.delta))
+    ):
+        ap.error("--max-partition-retries needs --store DIR and --algo son "
+                 "(or --count-cache/--delta, which run SON phase 1 inside)")
     if (args.progress or args.trace_out or args.metrics_out) and store is None:
         ap.error("--progress/--trace-out/--metrics-out instrument the streamed "
                  "driver: add --store DIR")
@@ -209,12 +231,30 @@ def main():
     if store is not None:
         from repro.core.streaming import mine_son_streamed, mine_streamed
 
-        if args.algo == "son":
-            fault = None
-            if args.max_partition_retries is not None:
-                from repro.distributed.fault_tolerance import FaultConfig
+        fault = None
+        if args.max_partition_retries is not None:
+            from repro.distributed.fault_tolerance import FaultConfig
 
-                fault = FaultConfig(max_retries=args.max_partition_retries)
+            fault = FaultConfig(max_retries=args.max_partition_retries)
+        if args.delta:
+            import dataclasses as _dc
+
+            from repro.core import incremental as inc
+
+            res, rep = inc.mine_delta(
+                store, cfg, mesh=mesh, chunk_rows=args.stream_chunk_rows,
+                fault=fault, checkpoint=True, resume=args.resume, obs=obs)
+            print(f"[mine] delta report: {json.dumps(_dc.asdict(rep))}")
+        elif args.count_cache:
+            from repro.core import incremental as inc
+
+            res, cache = inc.build_count_cache(
+                store, cfg, mesh=mesh, chunk_rows=args.stream_chunk_rows,
+                fault=fault, obs=obs)
+            print(f"[mine] count cache seq={cache.seq} covering n={cache.n} "
+                  f"({cache.candidate_total()} cached candidates over levels "
+                  f"{sorted(cache.levels)}) -> {store.path}")
+        elif args.algo == "son":
             res = mine_son_streamed(store, cfg, mesh=mesh,
                                     chunk_rows=args.stream_chunk_rows, fault=fault,
                                     obs=obs)

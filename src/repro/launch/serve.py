@@ -15,6 +15,11 @@
   # router, with an injected replica kill AND a coordinated hot-swap live:
   PYTHONPATH=src python -m repro.launch.serve ... --replicas 3 \
       --kill-replica-mid-load --hot-swap-mid-load --deadline-ms 5000
+  # continuous refresh (DESIGN.md §15): the initial mine persists a count
+  # cache; 5% new rows are APPENDED to the live store mid-load and the
+  # RefreshController delta-mines + hot-swaps them in under traffic:
+  PYTHONPATH=src python -m repro.launch.serve ... --refresh delta \
+      --append-mid-load 0.05
   # machine-readable summary (the CI smoke gate reads this):
   PYTHONPATH=src python -m repro.launch.serve ... --json serve-smoke.json
   # SLOs + burn-rate alerting + closed-loop reactions (DESIGN.md §14); the
@@ -74,9 +79,25 @@ def main():
     ap.add_argument("--requests", type=int, default=2_000)
     ap.add_argument("--concurrency", type=int, default=16)
     ap.add_argument("--hot-swap-mid-load", action="store_true",
-                    help="re-mine the store and hot-swap the rulebook at half load")
+                    help="re-mine the store and hot-swap the rulebook at half "
+                         "load; goes through the incremental delta path when "
+                         "the refresh mode resolves to delta (DESIGN.md §15)")
     ap.add_argument("--swap-min-support", type=float, default=None,
-                    help="min-support of the re-mine (default: 2x --min-support)")
+                    help="min-support of the full re-mine (default: 2x "
+                         "--min-support; ignored on the delta path, which "
+                         "keeps the serving config and folds in new rows)")
+    ap.add_argument("--refresh", default="auto", choices=["auto", "delta", "full"],
+                    help="rulebook refresh path: 'delta' mines appended rows "
+                         "against the persisted count cache and drives the "
+                         "swap through the RefreshController; 'full' keeps "
+                         "the legacy whole-store re-mine; 'auto' picks delta "
+                         "when the store already has a count cache (or "
+                         "--append-mid-load asked for one)")
+    ap.add_argument("--append-mid-load", type=float, default=0.0, metavar="FRAC",
+                    help="append FRAC of the store's rows mid-load and wait "
+                         "for the refresh controller to mine + hot-swap them "
+                         "(the continuous-refresh smoke; implies a mid-load "
+                         "swap)")
     ap.add_argument("--supervise", action="store_true",
                     help="run a WorkerSupervisor over the gateway's dispatch "
                          "worker (restarts it if it dies, DESIGN.md §11)")
@@ -134,12 +155,19 @@ def main():
 
     import numpy as np
 
+    from repro.core import incremental as inc
     from repro.core.apriori import AprioriConfig
     from repro.core.streaming import mine_streamed
-    from repro.data.store import ingest_quest, open_store
-    from repro.data.synthetic import QuestConfig
+    from repro.data.store import append_chunks, ingest_quest, open_store
+    from repro.data.synthetic import QuestConfig, gen_transactions_chunked
     from repro.distributed import FaultConfig
-    from repro.serving import AdmissionRejected, Gateway, Router, compile_rulebook
+    from repro.serving import (
+        AdmissionRejected,
+        Gateway,
+        RefreshController,
+        Router,
+        compile_rulebook,
+    )
 
     # ---- 1. load (or ingest) the on-disk store ----
     qcfg = QuestConfig(num_transactions=args.transactions, num_items=args.items,
@@ -172,7 +200,36 @@ def main():
               f"(min_support={min_support}) in {time.perf_counter() - t0:.2f}s")
         return rb
 
-    rb = mine_rulebook(args.min_support)
+    # refresh-path resolution (DESIGN.md §15): delta rides the persisted
+    # count cache; auto picks it up when the store has one (a cache mined at
+    # a different config is fine — mine_delta falls back + rebuilds it)
+    refresh_mode = args.refresh
+    if refresh_mode == "auto":
+        refresh_mode = ("delta" if (store.count_cache_meta is not None
+                                    or args.append_mid_load > 0) else "full")
+    refresh_swap = (args.append_mid_load > 0
+                    or (args.hot_swap_mid_load and refresh_mode == "delta"))
+    legacy_swap = args.hot_swap_mid_load and not refresh_swap
+    if refresh_swap and args.append_mid_load <= 0:
+        args.append_mid_load = 0.05
+
+    base_cfg = AprioriConfig(min_support=args.min_support, max_k=args.max_k,
+                             count_impl=args.impl, representation="packed")
+    if refresh_mode == "delta":
+        # the universal entry: noop when the cache already covers the store,
+        # delta when rows were appended, full build on a cold/invalid cache —
+        # every path leaves a cache the mid-load refresh can fold into
+        t0 = time.perf_counter()
+        res0, rep0 = inc.mine_delta(store, base_cfg,
+                                    chunk_rows=args.stream_chunk_rows)
+        rb = compile_rulebook(res0, min_confidence=args.min_confidence,
+                              score=args.rule_score, max_rules=args.max_rules,
+                              num_items=store.num_items)
+        print(f"[serve] initial mine via count cache: mode={rep0.mode} "
+              f"({rep0.reason or 'up-to-date'}) {res0.total_frequent} itemsets "
+              f"-> {rb.num_rules} rules in {time.perf_counter() - t0:.2f}s")
+    else:
+        rb = mine_rulebook(args.min_support)
 
     # baskets for the client load: the store's own transactions (packed rows)
     chunk, real = next(store.iter_chunks(min(4096, store.num_transactions)))
@@ -294,20 +351,30 @@ def main():
                         raise SystemExit("injected dispatch-worker death")
                 gw._batcher._crash_hook = hook
         mid_load = (args.crash_worker_mid_load or args.kill_replica_mid_load
-                    or args.hot_swap_mid_load)
+                    or args.hot_swap_mid_load or refresh_swap)
+        ctl = None
+        refresh_summary = None
         t0 = time.perf_counter()
         with ThreadPoolExecutor(max_workers=args.concurrency) as pool:
             if mid_load:
                 miner = None
-                if args.hot_swap_mid_load:
-                    # re-mine WHILE the first half of the load is live, swap,
-                    # then drive the rest against the new generation
+                if legacy_swap:
+                    # full path: re-mine WHILE the first half of the load is
+                    # live, swap, then drive the rest on the new generation
                     swap_ms = (2 * args.min_support if args.swap_min_support is None
                                else args.swap_min_support)
                     rb2_box = {}
                     miner = threading.Thread(
                         target=lambda: rb2_box.update(rb=mine_rulebook(swap_ms)))
                     miner.start()
+                elif refresh_swap:
+                    ctl = RefreshController(
+                        store_dir, gw, base_cfg,
+                        chunk_rows=args.stream_chunk_rows,
+                        min_confidence=args.min_confidence,
+                        score=args.rule_score, max_rules=args.max_rules,
+                        mode=refresh_mode, poll_interval_s=0.05,
+                    ).start()
                 fire(half, 0, pool)
                 if args.crash_worker_mid_load:
                     _arm_crash()
@@ -320,10 +387,53 @@ def main():
                     gen = gw.hot_swap(rb2_box["rb"])
                     kind = "coordinated two-phase" if use_router else "hot"
                     print(f"[serve] {kind}-swapped to generation {gen} with traffic live")
+                if ctl is not None:
+                    # append new rows into the LIVE store, then let the
+                    # controller notice the watermark, delta-mine, and swap —
+                    # the second half of the load runs on the new generation
+                    age_gauge = getattr(gw.metrics, "generation_age", None)
+                    age_before = age_gauge.value if age_gauge is not None else None
+                    append_n = max(1, int(args.append_mid_load
+                                          * store.num_transactions))
+                    aq = QuestConfig(num_transactions=append_n,
+                                     num_items=args.items,
+                                     avg_len=args.avg_len, seed=args.seed + 1)
+                    append_chunks(
+                        gen_transactions_chunked(aq, args.stream_chunk_rows),
+                        store_dir)
+                    print(f"[serve] appended {append_n} rows mid-load; waiting "
+                          f"for the {refresh_mode} refresh ...")
+                    deadline = time.perf_counter() + 300.0
+                    while not ctl.history and time.perf_counter() < deadline:
+                        time.sleep(0.02)
+                    if not ctl.history:
+                        raise RuntimeError(
+                            f"mid-load refresh did not complete: {ctl.last_error!r}")
+                    age_after = age_gauge.value if age_gauge is not None else None
+                    last = ctl.history[-1]
+                    kind = "coordinated two-phase" if use_router else "hot"
+                    print(f"[serve] refresh {kind}-swapped to generation "
+                          f"{last['generation']} ({last['mode']}, "
+                          f"{last['delta_rows']} rows, {last['seconds']:.2f}s) "
+                          f"with traffic live")
+                    refresh_summary = {
+                        "mode": last["mode"],
+                        "reason": last["reason"],
+                        "latency_s": last["seconds"],
+                        "delta_rows": last["delta_rows"],
+                        "novel_candidates": last["novel_candidates"],
+                        "appended_rows": append_n,
+                        "generation": last["generation"],
+                        "rules": last["rules"],
+                        "age_before_s": age_before,
+                        "age_after_s": age_after,
+                    }
                 fire(args.requests - half, half, pool)
             else:
                 fire(args.requests, 0, pool)
         wall = time.perf_counter() - t0
+        if ctl is not None:
+            ctl.stop()
 
         if supervisor is not None:
             supervisor.close()
@@ -430,6 +540,8 @@ def main():
             "availability": lat.size / terminal if terminal else 0.0,
             "brownout_level": stats["brownout_level"],
         })
+    if refresh_summary is not None:
+        summary["refresh"] = refresh_summary
     if slo_status is not None:
         summary["slo"] = slo_status
         summary["alerts"] = alert_events

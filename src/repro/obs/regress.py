@@ -67,6 +67,13 @@ INVARIANTS: Dict[str, List[Tuple[str, str, object]]] = {
         ("parity", "==", "ok"),
         ("replayed_levels", "<=", 1),
     ],
+    # incremental refresh (§15): folding a 1% append through the count cache
+    # must stay dict-identical to the full re-mine AND well ahead of it
+    "fault_refresh_delta_p1": [
+        ("parity", "==", "ok"),
+        ("mode", "==", "delta"),
+        ("speedup_vs_full", ">=", 3.0),
+    ],
     # full instrumentation is near-free and provably inert (§13 gate)
     "obs_mine_instrumented_n60000": [
         ("overhead_vs_plain", "<=", 1.05),

@@ -19,6 +19,7 @@ from repro.serving.batcher import (
 from repro.serving.cache import BasketCache, basket_key
 from repro.serving.gateway import Gateway, Response, pow2_bucket
 from repro.serving.metrics import GatewayMetrics, LatencyHistogram, RouterMetrics
+from repro.serving.refresh import RefreshController, RefreshMetrics
 from repro.serving.router import HashRing, Router, RouterFaultInjection
 from repro.serving.recommend import (
     RecommendResult,

@@ -1,0 +1,312 @@
+"""Incremental delta mining (DESIGN.md §15): count-cache persistence, the
+delta == full-re-mine equivalence property, fallback triggers, and the
+checkpoint story — a pre-append full-mine checkpoint is rejected while the
+delta path accepts the same grown store, and a crash mid-delta resumes."""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import apriori as ap
+from repro.core import incremental as inc
+from repro.core import son as son_mod
+from repro.core import streaming as stm
+from repro.data import store as ds
+from repro.data.synthetic import QuestConfig, gen_transactions
+from repro.distributed.checkpoint import (
+    CheckpointMismatch,
+    MiningCheckpoint,
+    mining_fingerprint,
+    store_fingerprint,
+)
+
+CFG = ap.AprioriConfig(min_support=0.02, max_k=3)
+
+
+def _quest(n, seed, items=48):
+    return gen_transactions(QuestConfig(num_transactions=n, num_items=items, seed=seed))
+
+
+def _grown(tmp_path, base, extra, shard_rows=256, cfg=CFG, chunk_rows=300):
+    """Ingest base, build the cache, append extra; returns (path, grown)."""
+    p = str(tmp_path / "db")
+    s = ds.ingest_dense(base, p, shard_rows=shard_rows)
+    inc.build_count_cache(s, cfg, chunk_rows=chunk_rows)
+    if len(extra):
+        ds.append_chunks([extra], p)
+    return p, np.concatenate([base, extra]) if len(extra) else base
+
+
+# ------------------------------------------------------------- persistence ----
+def test_build_count_cache_persists_full_union(tmp_path):
+    base = _quest(1500, seed=1)
+    p = str(tmp_path / "db")
+    s = ds.ingest_dense(base, p, shard_rows=256)
+    res, cache = inc.build_count_cache(s, CFG, chunk_rows=300)
+    assert res.as_dict() == ap.mine(base, CFG).as_dict()
+    # reload through the manifest section: byte-identical arrays
+    loaded = inc.load_count_cache(ds.open_store(p))
+    assert loaded is not None and loaded.seq == cache.seq == 1
+    assert loaded.store_fp == store_fingerprint(s)
+    assert set(loaded.levels) == set(cache.levels)
+    for k in cache.levels:
+        assert np.array_equal(loaded.levels[k][0], cache.levels[k][0])
+        assert np.array_equal(loaded.levels[k][1], cache.levels[k][1])
+    # the cache is the PRE-prune union: counts below min_count are kept too
+    assert any((cnt < res.min_count).any() for _, cnt in cache.levels.values())
+    # rebuilding bumps the seq and GCs the superseded sidecar
+    _, cache2 = inc.build_count_cache(ds.open_store(p), CFG, chunk_rows=300)
+    assert cache2.seq == 2
+    assert not os.path.exists(os.path.join(p, inc.cache_filename(1)))
+    assert os.path.exists(os.path.join(p, inc.cache_filename(2)))
+
+
+def test_load_count_cache_absent_or_stale(tmp_path):
+    p = str(tmp_path / "db")
+    s = ds.ingest_dense(_quest(200, seed=2), p, shard_rows=64)
+    assert inc.load_count_cache(s) is None
+    _, cache = inc.build_count_cache(s, CFG, chunk_rows=128)
+    # missing sidecar file -> unusable, not an exception
+    os.remove(os.path.join(p, inc.cache_filename(cache.seq)))
+    assert inc.load_count_cache(ds.open_store(p)) is None
+
+
+# ----------------------------------------- the equivalence property (§15) ----
+@pytest.mark.parametrize("representation", ["dense", "packed"])
+@pytest.mark.parametrize("append_n", [40, 400, 1400])
+def test_delta_mine_dict_identical_to_full_remine(tmp_path, representation, append_n):
+    """The acceptance property: after an append (1 shard .. many shards,
+    distribution-shifted so supports cross minsup in BOTH directions), the
+    delta mine equals a full re-mine of the grown store — in both
+    representations."""
+    cfg = dataclasses.replace(CFG, representation=representation)
+    base = _quest(3000, seed=3)
+    extra = _quest(append_n, seed=103)   # different seed = shifted mixture
+    p, grown = _grown(tmp_path, base, extra, cfg=cfg)
+    res, rep = inc.mine_delta(ds.open_store(p), cfg, chunk_rows=300)
+    assert rep.mode == "delta"
+    full = stm.mine_son_streamed(ds.ingest_dense(grown, str(tmp_path / "ref"), shard_rows=256), cfg, chunk_rows=300)
+    assert res.as_dict() == full.as_dict()
+    assert res.min_count == full.min_count
+    assert res.num_transactions == len(grown)
+    # the advanced cache seeds the NEXT delta: append again and re-check
+    extra2 = _quest(200, seed=7)
+    ds.append_chunks([extra2], p)
+    res2, rep2 = inc.mine_delta(ds.open_store(p), cfg, chunk_rows=300)
+    assert rep2.mode == "delta"
+    assert res2.as_dict() == ap.mine(np.concatenate([grown, extra2]), cfg).as_dict()
+
+
+def test_delta_crossings_both_directions_and_novel_reverify(tmp_path):
+    """Engineered crossings: itemset A is frequent in the base and falls
+    below minsup after the append; itemset B is infrequent in the base (so
+    it is NOT in the cache union — the base is one partition) and crosses
+    above, which forces the borderline re-verify pass over the base shards."""
+    rng = np.random.default_rng(0)
+    n_base, items = 200, 16
+    base = (rng.random((n_base, items)) < 0.05).astype(np.int8)
+    base[:, :4] = 0
+    base[:21, [0, 1]] = 1        # A = {0,1}: 21 >= ceil(0.1*200) = 20
+    base[30:49, [2, 3]] = 1      # B = {2,3}: 19 < 20 -> NOT in the union
+    extra = (rng.random((40, items)) < 0.05).astype(np.int8)
+    extra[:, :4] = 0
+    extra[:30, [2, 3]] = 1       # B gains 30
+    cfg = ap.AprioriConfig(min_support=0.1, max_k=2)
+    p = str(tmp_path / "db")
+    s = ds.ingest_dense(base, p, shard_rows=1000)   # ONE base partition
+    _, cache = inc.build_count_cache(s, cfg, chunk_rows=64)
+    assert (0, 1) in inc.result_from_cache(cache, 20).as_dict()
+    assert (2, 3) not in son_mod.arrays_to_winners(
+        {k: c for k, (c, _) in cache.levels.items()}
+    ).get(2, set())
+    ds.append_chunks([extra], p)
+    # drift guard off: the 16-item toy vocabulary would trip it, and the
+    # drift fallback has its own test — here we want the delta path
+    res, rep = inc.mine_delta(
+        ds.open_store(p), cfg, chunk_rows=64, max_drift_fraction=1.0
+    )
+    got = res.as_dict()
+    # grown: n=240, min_count=24; A: 21 < 24 (crossed down), B: 49 >= 24 (up)
+    assert (0, 1) not in got and got[(2, 3)] == 49
+    assert rep.novel_candidates > 0, "B must have gone through the re-verify pass"
+    assert got == ap.mine(np.concatenate([base, extra]), cfg).as_dict()
+
+
+def test_delta_noop_without_new_shards(tmp_path):
+    p, grown = _grown(tmp_path, _quest(800, seed=4), np.zeros((0, 48), np.int8))
+    res, rep = inc.mine_delta(ds.open_store(p), CFG, chunk_rows=300)
+    assert rep.mode == "noop" and rep.delta_rows == 0
+    assert res.as_dict() == ap.mine(grown, CFG).as_dict()
+
+
+# ---------------------------------------------------------------- fallbacks ----
+def test_delta_fallback_reasons(tmp_path):
+    base = _quest(1000, seed=5)
+    p, _ = _grown(tmp_path, base, _quest(100, seed=6))
+    # config changed -> full re-mine, cache rebuilt at the new config
+    other = dataclasses.replace(CFG, min_support=0.05)
+    res, rep = inc.mine_delta(ds.open_store(p), other, chunk_rows=300)
+    assert (rep.mode, rep.reason) == ("full", "config_changed")
+    assert res.as_dict() == ap.mine(np.concatenate([base, _quest(100, seed=6)]), other).as_dict()
+    # no cache at all
+    p2 = str(tmp_path / "db2")
+    ds.ingest_dense(base, p2, shard_rows=256)
+    _, rep2 = inc.mine_delta(ds.open_store(p2), CFG, chunk_rows=300)
+    assert (rep2.mode, rep2.reason) == ("full", "no_cache")
+    # oversized delta
+    ds.append_chunks([_quest(1500, seed=8)], p2)
+    _, rep3 = inc.mine_delta(ds.open_store(p2), CFG, chunk_rows=300)
+    assert (rep3.mode, rep3.reason) == ("full", "delta_fraction")
+
+
+def test_delta_fallback_on_base_mutation_and_drift(tmp_path):
+    base = _quest(600, seed=9, items=24)
+    p, _ = _grown(tmp_path, base, np.zeros((0, 24), np.int8), shard_rows=128)
+    # re-ingest different base under the SAME cache section -> base_mutated
+    meta = ds.open_store(p).count_cache_meta
+    ds.ingest_dense(_quest(600, seed=10, items=24), p, shard_rows=100)
+    s = ds.open_store(p)
+    s.set_count_cache(meta)   # graft the stale section back on
+    assert inc.cache_invalid_reason(s, inc.load_count_cache(s), CFG) == "base_mutated"
+    # vocabulary drift: the append lights up items the base never had
+    p2 = str(tmp_path / "db2")
+    rng = np.random.default_rng(1)
+    narrow = np.zeros((400, 24), np.int8)
+    narrow[:, :4] = (rng.random((400, 4)) < 0.5).astype(np.int8)
+    s2 = ds.ingest_dense(narrow, p2, shard_rows=128)
+    inc.build_count_cache(s2, CFG, chunk_rows=128)
+    wide = (rng.random((120, 24)) < 0.5).astype(np.int8)   # all 24 items hot
+    ds.append_chunks([wide], p2)
+    res, rep = inc.mine_delta(ds.open_store(p2), CFG, chunk_rows=128)
+    assert (rep.mode, rep.reason) == ("full", "vocabulary_drift")
+    assert res.as_dict() == ap.mine(np.concatenate([narrow, wide]), CFG).as_dict()
+
+
+# ------------------------------------------ checkpoints vs appended shards ----
+def test_full_mine_checkpoint_rejected_after_append_but_delta_accepts(tmp_path):
+    """The satellite contract: a mining checkpoint taken BEFORE an append
+    must be rejected for a full-mine resume of the grown store (its counts
+    covered fewer rows), while the delta path accepts the very same store —
+    its fingerprint covers only the base-shard prefix it counted."""
+    base = _quest(1200, seed=11)
+    p = str(tmp_path / "db")
+    s = ds.ingest_dense(base, p, shard_rows=256)
+    inc.build_count_cache(s, CFG, chunk_rows=300)
+    # a pre-append full-mine snapshot (level boundary is enough)
+    mgr = MiningCheckpoint(str(tmp_path / "ck"))
+    from repro.distributed.checkpoint import MiningState
+    mgr.save(MiningState(levels={}, next_k=2), store_fingerprint(s),
+             mining_fingerprint(CFG, 300))
+    mgr.wait()
+    grown = ds.append_chunks([_quest(150, seed=12)], p)
+    # full-mine resume: explicit mismatch, never a silent wrong answer
+    _, manifest = mgr.load_latest()
+    with pytest.raises(CheckpointMismatch):
+        mgr.validate(manifest, store_fingerprint(grown), mining_fingerprint(CFG, 300))
+    with pytest.raises(CheckpointMismatch):
+        stm.mine_streamed(grown, CFG, chunk_rows=300, checkpoint=mgr, resume=True)
+    # the delta path accepts the same grown store: its base-prefix
+    # fingerprint still matches what the cache counted
+    cache = inc.load_count_cache(grown)
+    assert inc.cache_invalid_reason(grown, cache, CFG) is None
+    assert store_fingerprint(grown, cache.num_shards) == cache.store_fp
+    res, rep = inc.mine_delta(grown, CFG, chunk_rows=300)
+    assert rep.mode == "delta"
+    assert res.as_dict() == ap.mine(np.concatenate([base, _quest(150, seed=12)]), CFG).as_dict()
+
+
+class _Crash(BaseException):
+    """Out-of-band interrupt no library code catches."""
+
+
+def test_delta_crash_resume_skips_phase1(tmp_path, monkeypatch):
+    """Crash after the phase-1 snapshot: the resumed delta mine restores the
+    appended-shard winners from the PR-6 checkpoint (phase 1 is NOT re-run)
+    and still matches the full re-mine."""
+    base = _quest(2000, seed=13)
+    extra = _quest(300, seed=14)
+    p, grown = _grown(tmp_path, base, extra)
+    store = ds.open_store(p)
+    real_count = stm.count_union_streamed
+
+    def boom(*a, **kw):
+        raise _Crash()
+
+    monkeypatch.setattr(inc.st, "count_union_streamed", boom)
+    with pytest.raises(_Crash):
+        inc.mine_delta(store, CFG, chunk_rows=300, checkpoint=True)
+    monkeypatch.setattr(inc.st, "count_union_streamed", real_count)
+
+    def no_phase1(*a, **kw):
+        raise AssertionError("phase 1 must be restored from the checkpoint")
+
+    monkeypatch.setattr(inc.son_mod, "union_local_winners", no_phase1)
+    res, rep = inc.mine_delta(
+        ds.open_store(p), CFG, chunk_rows=300, checkpoint=True, resume=True
+    )
+    monkeypatch.undo()
+    assert rep.mode == "delta" and rep.resumed_phase == inc._PHASE_WINNERS
+    assert res.as_dict() == ap.mine(grown, CFG).as_dict()
+    # a completed delta clears its snapshots
+    assert MiningCheckpoint(
+        os.path.join(ds.open_store(p).checkpoint_path, "delta")
+    ).load_latest() is None
+
+
+def test_delta_crash_resume_after_delta_counts(tmp_path, monkeypatch):
+    """Crash after the phase-2 snapshot (delta counts done, base re-verify
+    pending): resume restores the union AND its delta counts, then only the
+    base pass runs."""
+    base = _quest(2000, seed=15)
+    extra = _quest(300, seed=16)
+    p, grown = _grown(tmp_path, base, extra)
+    real_count = stm.count_union_streamed
+    calls = {"n": 0}
+
+    def crash_on_base_pass(store, per_level, *a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:      # 1st call = delta pass, 2nd = base re-verify
+            raise _Crash()
+        return real_count(store, per_level, *a, **kw)
+
+    monkeypatch.setattr(inc.st, "count_union_streamed", crash_on_base_pass)
+    with pytest.raises(_Crash):
+        inc.mine_delta(ds.open_store(p), CFG, chunk_rows=300, checkpoint=True)
+    monkeypatch.undo()
+    seen_shards = []
+    real_count2 = stm.count_union_streamed
+
+    def record(store, per_level, *a, **kw):
+        seen_shards.append(kw.get("shards"))
+        return real_count2(store, per_level, *a, **kw)
+
+    monkeypatch.setattr(inc.st, "count_union_streamed", record)
+    res, rep = inc.mine_delta(
+        ds.open_store(p), CFG, chunk_rows=300, checkpoint=True, resume=True
+    )
+    monkeypatch.undo()
+    assert rep.resumed_phase == inc._PHASE_DELTA_COUNTS
+    cache_shards = rep.base_shards
+    assert all(s == (0, cache_shards) for s in seen_shards), seen_shards
+    assert res.as_dict() == ap.mine(grown, CFG).as_dict()
+
+
+def test_delta_checkpoint_rejects_foreign_cache_generation(tmp_path):
+    """A delta snapshot is pinned to the cache generation it folds into:
+    if the cache advanced underneath it, resume refuses."""
+    base = _quest(1000, seed=17)
+    p, _ = _grown(tmp_path, base, _quest(100, seed=18))
+    store = ds.open_store(p)
+    cache = inc.load_count_cache(store)
+    sfp, mfp = inc.delta_fingerprints(store, cache, CFG, 300)
+    mgr = inc._delta_manager(True, store)
+    from repro.distributed.checkpoint import MiningState
+    mgr.save(MiningState(levels={}, next_k=inc._PHASE_WINNERS), sfp, mfp)
+    mgr.wait()
+    _, manifest = mgr.load_latest()
+    stale = dataclasses.replace(cache, seq=cache.seq + 1)
+    sfp2, mfp2 = inc.delta_fingerprints(store, stale, CFG, 300)
+    with pytest.raises(CheckpointMismatch):
+        mgr.validate(manifest, sfp2, mfp2)

@@ -187,3 +187,104 @@ def test_manifest_checkpoint_dir_and_backward_compat(tmp_path):
         json.dump(d, f)
     old = st.open_store(s.path)
     assert old.checkpoint_path == os.path.join(s.path, st.DEFAULT_CHECKPOINT_DIR)
+
+
+# ------------------------------------------------------------- append mode ----
+def test_open_for_append_roundtrip(tmp_path):
+    """Append equals ingesting the concatenation: same logical rows, and the
+    base shard files are never rewritten."""
+    base = _rand_dense(100, 24, seed=1)
+    extra = _rand_dense(37, 24, seed=2)
+    p = str(tmp_path / "db")
+    s0 = st.ingest_dense(base, p, shard_rows=32)
+    base_shards = s0.num_partitions
+    mtimes = {i: os.path.getmtime(s0.shard_path(i)) for i in range(base_shards)}
+    w = st.StoreWriter.open_for_append(p)
+    w.append_dense(extra)
+    s1 = w.close()
+    assert s1.num_transactions == 137
+    assert np.array_equal(s1.read_dense(), np.concatenate([base, extra]))
+    # appended rows start a NEW shard: the base prefix is untouched
+    assert s1.manifest.shard_rows[:base_shards] == s0.manifest.shard_rows
+    assert {i: os.path.getmtime(s1.shard_path(i)) for i in range(base_shards)} == mtimes
+    # manifest generation bumped, atomically (no temp file left behind)
+    assert s1.manifest.seq == s0.manifest.seq + 1
+    assert not os.path.exists(os.path.join(p, st.MANIFEST_NAME + ".tmp"))
+
+
+def test_append_chunks_matches_writer(tmp_path):
+    base = _rand_dense(64, 16, seed=3)
+    extra = _rand_dense(50, 16, seed=4)
+    pa, pb = str(tmp_path / "a"), str(tmp_path / "b")
+    st.ingest_dense(base, pa, shard_rows=16)
+    sa = st.append_chunks([extra[:20], pack_bits(extra[20:])], pa)
+    sb = st.ingest_dense(np.concatenate([base, extra]), pb, shard_rows=16)
+    assert np.array_equal(sa.read_dense(), sb.read_dense())
+
+
+def test_torn_append_leaves_old_manifest_readable(tmp_path):
+    """Kill between shard write and manifest write: the old store must stay
+    fully readable, and the next append open sweeps the orphan shards."""
+    base = _rand_dense(80, 16, seed=5)
+    p = str(tmp_path / "db")
+    s0 = st.ingest_dense(base, p, shard_rows=32)
+    w = st.StoreWriter.open_for_append(p)
+    w.append_dense(_rand_dense(64, 16, seed=6))
+    w._flush()                       # orphan shard files hit the disk...
+    orphan = os.path.join(p, st.shard_filename(s0.num_partitions))
+    assert os.path.exists(orphan)
+    del w                            # ...but close() never ran: torn append
+    old = st.open_store(p)
+    assert old.manifest.seq == s0.manifest.seq
+    assert old.num_transactions == 80
+    assert np.array_equal(old.read_dense(), base)
+    # recovery: a fresh append open removes the orphans and appends cleanly
+    w2 = st.StoreWriter.open_for_append(p)
+    assert not os.path.exists(orphan)
+    extra = _rand_dense(10, 16, seed=7)
+    w2.append_dense(extra)
+    s2 = w2.close()
+    assert np.array_equal(s2.read_dense(), np.concatenate([base, extra]))
+
+
+def test_open_for_append_rejects_shape_mismatch_and_missing(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        st.StoreWriter.open_for_append(str(tmp_path / "nope"))
+    p = str(tmp_path / "db")
+    st.ingest_dense(_rand_dense(10, 16, seed=8), p, shard_rows=8)
+    w = st.StoreWriter.open_for_append(p)
+    with pytest.raises(ValueError):
+        w.append_dense(_rand_dense(4, 17, seed=9))   # wrong num_items
+
+
+def test_append_preserves_count_cache_section(tmp_path):
+    p = str(tmp_path / "db")
+    s0 = st.ingest_dense(_rand_dense(40, 16, seed=10), p, shard_rows=16)
+    meta = {"version": 1, "seq": 1, "file": "count_cache_00000001.npz",
+            "min_support": 0.1, "max_k": 3, "n": 40,
+            "store": {"shard_rows": list(s0.manifest.shard_rows)}, "levels": []}
+    np.savez(os.path.join(p, meta["file"]))
+    s0.set_count_cache(meta)
+    assert st.open_store(p).count_cache_meta == meta
+    s1 = st.append_chunks([_rand_dense(8, 16, seed=11)], p)
+    assert s1.count_cache_meta == meta   # appends keep the section verbatim
+    # clearing drops the section AND the sidecar
+    s1.set_count_cache(None)
+    assert st.open_store(p).count_cache_meta is None
+    assert not os.path.exists(os.path.join(p, meta["file"]))
+
+
+def test_iter_chunks_shard_range(tmp_path):
+    dense = _rand_dense(100, 16, seed=12)
+    p = str(tmp_path / "db")
+    s = st.ingest_dense(dense, p, shard_rows=17)
+    rows = s.manifest.shard_rows
+    for s0, s1 in [(0, 2), (2, 5), (0, s.num_partitions), (3, 3)]:
+        got = [c for c, v in s.iter_chunks(7, representation="dense", shards=(s0, s1))]
+        lo = sum(rows[:s0]); hi = lo + sum(rows[s0:s1])
+        want = dense[lo:hi]
+        assert np.array_equal(np.concatenate(got) if got else np.zeros((0, 16)), want)
+    with pytest.raises(ValueError):
+        list(s.iter_chunks(7, shards=(3, 2)))
+    with pytest.raises(ValueError):
+        list(s.iter_chunks(7, shards=(0, s.num_partitions + 1)))
